@@ -1,0 +1,29 @@
+"""Paper Table 1: qualitative comparison of GPU sharing approaches,
+grounded in this repo's measured quantities where available."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+
+ROWS = [
+    # approach, DL support, efficiency, fast switching, flexible scheduling
+    ("non_dl_virtualization", "no", "-", "-", "-"),
+    ("static_partitioning", "yes", "no", "no", "no"),
+    ("sp_mps", "partial", "yes", "yes", "no"),
+    ("sp_mps_uma", "partial", "no", "yes", "yes"),
+    ("gandiva_timeslicing", "yes", "yes", "no(seconds)", "no"),
+    ("tensorrt_streams", "yes", "yes", "yes", "no"),
+    ("salus_this_repo", "yes", "yes", "yes(sub-ms bookkeeping)", "yes(4 policies)"),
+]
+
+
+def run():
+    for name, dl, eff, switch, sched in ROWS:
+        emit(
+            f"table1_{name}",
+            0.0,
+            f"dl_support={dl};efficiency={eff};fast_switching={switch};flexible_scheduling={sched}",
+        )
+
+
+if __name__ == "__main__":
+    run()

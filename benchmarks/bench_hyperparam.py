@@ -1,0 +1,34 @@
+"""Paper Figure 12: hyper-parameter exploration makespan, PACK vs FIFO.
+
+Two 300-job sweeps: superres_128 (low-utilization: packing wins, paper
+2.38x) and resnet50_50 (compute-bound: ~no win, paper 1.07x)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core import GB, Simulator, get_policy
+from repro.core.tracegen import hyperparam_trace
+
+
+def run(n_jobs: int = 300):
+    for name, paper in (("superres_128", 2.38), ("resnet50_50", 1.07)):
+        t0 = time.perf_counter()
+        fifo = Simulator(16 * GB, get_policy("fifo")).run(
+            hyperparam_trace(name, n_jobs=n_jobs)
+        )
+        pack = Simulator(16 * GB, get_policy("pack")).run(
+            hyperparam_trace(name, n_jobs=n_jobs)
+        )
+        us = (time.perf_counter() - t0) * 1e6
+        ratio = fifo.makespan / pack.makespan
+        emit(
+            f"fig12_{name}",
+            us,
+            f"fifo_makespan_min={fifo.makespan/60:.1f};pack_makespan_min={pack.makespan/60:.1f};"
+            f"improvement={ratio:.2f}x;paper={paper}x",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Paper Figures 1/2/5 + §3.2.1: the memory taxonomy that justifies Salus.
+
+Measures persistent (model + framework) vs ephemeral (per-iteration) memory
+of REAL compiled training steps for our smoke-scale models via
+``memory_analysis`` — the JAX analogue of the paper's allocator traces —
+and reports the persistent:ephemeral ratio (paper: persistent is a small
+fraction, enabling resident fast switching)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.configs import ARCHS as ALL_ARCHS, get_config
+from repro.core.profiles import PAPER_WORKLOADS, profile_executable
+from repro.data.pipeline import SyntheticLM
+from repro.models import ModelOptions, build_model
+from repro.train.optimizer import AdamW, AdamWConfig
+from repro.train.train_step import make_train_step
+
+
+def run():
+    import jax.numpy as jnp
+
+    for name in sorted(ALL_ARCHS):
+        cfg = get_config(name).smoke()
+        model = build_model(
+            cfg, ModelOptions(loss_chunk=8, moe_group=16, wkv_chunk=8, ssm_chunk=8)
+        )
+        opt = AdamW(AdamWConfig())
+        params = model.init(jax.random.PRNGKey(0))
+        opt_state = opt.init(params)
+        b, s = 8, 32
+        pipe = SyntheticLM(cfg.vocab_size, s, b, seed=0)
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+        if cfg.frontend == "audio_frames":  # modality stub inputs
+            del batch["tokens"]
+            batch["frame_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(1), (b, s, cfg.d_model), jnp.float32
+            )
+        if cfg.frontend == "vision_patches":
+            batch["patch_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(2), (b, cfg.n_frontend_tokens, cfg.d_model), jnp.float32
+            )
+        if cfg.rope_variant == "mrope":
+            pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, None], (b, 3, s))
+            batch["positions"] = pos
+        step = make_train_step(model, opt)
+        compiled = jax.jit(step).lower(params, opt_state, batch).compile()
+        prof = profile_executable(compiled)
+        emit(
+            f"fig5_taxonomy_{name}",
+            0.0,
+            f"persistent_mb={prof.persistent/2**20:.1f};ephemeral_mb={prof.ephemeral/2**20:.1f};"
+            f"persistent_frac={prof.persistent/prof.total:.3f}",
+        )
+    # Figure 1 analogue from the paper workload table: peak vs persistent
+    lo = min(p for p, *_ in PAPER_WORKLOADS.values())
+    hi = max(p for p, *_ in PAPER_WORKLOADS.values())
+    peak = max(e for _, e, *_ in PAPER_WORKLOADS.values())
+    emit(
+        "fig1_paper_workloads",
+        0.0,
+        f"persistent_range_mb={lo:.0f}-{hi:.0f};max_peak_mb={peak:.0f};paper=110.9-822.2,13800",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,115 @@
+"""Paper Figure 14 + §5.4: Salus per-iteration overhead vs bare execution.
+
+Live on the CPU device: trains smoke-scale models both through a bare JAX
+loop and through the SalusExecutor (FIFO, single job — isolating executor
+overhead), reporting normalized per-iteration time (paper: <10% for most
+workloads). Also reproduces Figure 15's two-concurrent-jobs comparison:
+Salus sharing vs sequential exclusive execution."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import GB, MB, MemoryProfile, SalusExecutor, VirtualDevice, get_policy
+from repro.data.pipeline import SyntheticLM
+from repro.models import ModelOptions, build_model
+from repro.train.optimizer import AdamW, AdamWConfig
+from repro.train.train_step import make_train_step
+
+ARCHS = ["gemma-2b", "qwen3-8b", "rwkv6-7b", "hymba-1.5b", "mixtral-8x22b"]
+N_ITERS = 20
+
+
+def build_session_parts(name, seed=0):
+    cfg = get_config(name).smoke()
+    model = build_model(
+        cfg, ModelOptions(loss_chunk=8, moe_group=16, wkv_chunk=8, ssm_chunk=8)
+    )
+    opt = AdamW(AdamWConfig(warmup_steps=2, total_steps=1000))
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+    pipe = SyntheticLM(cfg.vocab_size, 32, 8, seed=seed)
+    raw_step = make_train_step(model, opt)
+
+    def step(state, batch):
+        p, o = state
+        p, o, m = raw_step(p, o, batch)
+        return (p, o), m
+
+    def data_fn(i):
+        import jax.numpy as jnp
+
+        return {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
+
+    return step, (params, opt_state), data_fn
+
+
+def bare_loop_time(name):
+    step, state, data_fn = build_session_parts(name)
+    jstep = jax.jit(step)
+    state, _ = jstep(state, data_fn(0))  # compile
+    jax.block_until_ready(state)
+    t0 = time.perf_counter()
+    for i in range(1, N_ITERS + 1):
+        state, _ = jstep(state, data_fn(i))
+    jax.block_until_ready(state)
+    return (time.perf_counter() - t0) / N_ITERS
+
+
+def salus_loop_time(name):
+    ex = SalusExecutor(capacity=8 * GB, policy=get_policy("fifo"))
+    vdev = VirtualDevice(ex)
+    step, state, data_fn = build_session_parts(name)
+    sess = vdev.create_session(
+        name, step, state, data_fn, n_iters=N_ITERS + 1,
+        profile=MemoryProfile(64 * MB, 64 * MB),
+    )
+    report = vdev.run()
+    recs = report.records[1:]  # drop compile iteration
+    return sum(r.duration for r in recs) / len(recs)
+
+
+def run():
+    for name in ARCHS:
+        bare = bare_loop_time(name)
+        salus = salus_loop_time(name)
+        emit(
+            f"fig14_overhead_{name}",
+            salus * 1e6,
+            f"bare_ms={bare*1e3:.2f};salus_ms={salus*1e3:.2f};"
+            f"normalized={salus/bare:.3f};paper=<1.10_for_most",
+        )
+    # Figure 15: two concurrent jobs — Salus FAIR vs exclusive sequential
+    name = "gemma-2b"
+    t0 = time.perf_counter()
+    ex = SalusExecutor(capacity=8 * GB, policy=get_policy("fair"))
+    vdev = VirtualDevice(ex)
+    for i in range(2):
+        step, state, data_fn = build_session_parts(name, seed=i)
+        vdev.create_session(
+            f"{name}#{i}", step, state, data_fn, n_iters=10,
+            profile=MemoryProfile(64 * MB, 64 * MB),
+        )
+    rep = vdev.run()
+    salus_makespan = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for i in range(2):
+        step, state, data_fn = build_session_parts(name, seed=i)
+        jstep = jax.jit(step)
+        for it in range(10):
+            state, _ = jstep(state, data_fn(it))
+        jax.block_until_ready(state)
+    seq_makespan = time.perf_counter() - t0
+    emit(
+        "fig15_two_jobs",
+        salus_makespan * 1e6,
+        f"salus_s={salus_makespan:.2f};exclusive_s={seq_makespan:.2f};"
+        f"avg_switch_ms={1e3*sum(rep.switch_latencies)/max(len(rep.switch_latencies),1):.3f}",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,19 @@
+"""Shared benchmark utilities: CSV emission per the harness contract."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Any, Callable, Dict, List
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def time_fn(fn: Callable, warmup: int = 1, iters: int = 5) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6  # us

@@ -1,0 +1,43 @@
+"""§Roofline: aggregate the dry-run cell reports into the roofline table.
+
+Reads experiments/dryrun/*.json (written by launch/dryrun.py) and emits one
+CSV row per (arch x shape x mesh): the three terms, the dominant one, the
+useful-FLOPs ratio and the fit check. The EXPERIMENTS.md table is generated
+from the same data (scripts/make_experiments_tables.py)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def run(directory=DRYRUN_DIR):
+    reports = []
+    for path in sorted(Path(directory).glob("*.json")):
+        try:
+            reports.append(json.loads(path.read_text()))
+        except json.JSONDecodeError:
+            continue
+    if not reports:
+        emit("roofline_no_data", 0.0, f"run launch/dryrun.py first ({directory})")
+        return
+    for r in reports:
+        t = r["roofline"]
+        tag = r.get("tag", "")
+        name = f"roofline_{r['arch']}_{r['shape']}_{r.get('mesh','?')}" + (f"_{tag}" if tag else "")
+        emit(
+            name,
+            t["step_lower_bound_s"] * 1e6,
+            f"compute_ms={t['compute_s']*1e3:.2f};memory_ms={t['memory_s']*1e3:.2f};"
+            f"collective_ms={t['collective_s']*1e3:.2f};dominant={t['dominant']};"
+            f"roofline_frac={t['roofline_fraction']:.3f};"
+            f"useful_flops={r['useful_flops_ratio']:.2f};"
+            f"peak_gib={r['peak_bytes_projected_tpu']/2**30:.2f};fits={r['fits_16GB']}",
+        )
+
+
+if __name__ == "__main__":
+    run()

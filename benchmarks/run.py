@@ -1,0 +1,46 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+  table2/fig8  bench_schedulers   FIFO/SRTF/PACK/FAIR on the 100-job trace
+  fig11        bench_fair         3-way fair sharing throughput
+  fig12        bench_hyperparam   PACK vs FIFO hyper-parameter makespan
+  fig13        bench_inference    inference packing (42 models -> N devices)
+  fig14/15     bench_overhead     live per-iteration overhead + 2-job sharing
+  fig4/9       bench_switching    transfer-vs-latency + live switch latency
+  fig1/5       bench_memory       persistent/ephemeral taxonomy (live)
+  roofline     roofline_report    §Roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    modules = [
+        "benchmarks.bench_comparison",
+        "benchmarks.bench_schedulers",
+        "benchmarks.bench_fair",
+        "benchmarks.bench_hyperparam",
+        "benchmarks.bench_inference",
+        "benchmarks.bench_memory",
+        "benchmarks.bench_switching",
+        "benchmarks.bench_overhead",
+        "benchmarks.roofline_report",
+    ]
+    failed = []
+    for mod_name in modules:
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+        except Exception as e:  # noqa: BLE001 - benches must not kill the run
+            failed.append(mod_name)
+            print(f"{mod_name},0.0,ERROR={type(e).__name__}:{e}", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

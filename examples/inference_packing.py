@@ -1,0 +1,77 @@
+"""Paper §5.3 live: pack many DL inference services onto ONE device.
+
+Builds smoke-scale instances of several assigned architectures, measures
+their real memory profiles by compiling one serving step each, admits them
+through the lane manager, and serves interleaved request batches — then
+prints the device count a no-sharing deployment would need.
+
+Run:  PYTHONPATH=src python examples/inference_packing.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import GB, SalusExecutor, VirtualDevice, get_policy
+from repro.models import ModelOptions, build_model
+
+ARCHS = ["gemma-2b", "qwen3-8b", "rwkv6-7b", "hymba-1.5b", "musicgen-medium", "qwen1.5-32b"]
+INSTANCES = 2  # per model
+REQUESTS = 12
+
+
+def make_service(name: str, inst: int):
+    cfg = get_config(name).smoke()
+    model = build_model(cfg, ModelOptions(loss_chunk=8, moe_group=16,
+                                          wkv_chunk=8, ssm_chunk=8))
+    params = model.init(jax.random.PRNGKey(hash((name, inst)) % 2**31))
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=32))
+
+    def handle(state, request):
+        logits, _ = prefill(state, request)
+        return state, {"next": jnp.argmax(logits, -1)}
+
+    def data_fn(i):
+        rng = jax.random.PRNGKey(i * 7 + inst)
+        if cfg.frontend == "audio_frames":
+            return {"frame_embeds": jax.random.normal(rng, (2, 16, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)}
+
+    return handle, params, data_fn
+
+
+def main():
+    executor = SalusExecutor(capacity=4 * GB, policy=get_policy("pack"))
+    vdev = VirtualDevice(executor)
+    services = []
+    for name in ARCHS:
+        for inst in range(INSTANCES):
+            # profile measured automatically by the adaptor (compiles 1 step)
+            services.append(
+                vdev.create_session(
+                    f"{name}#{inst}", *make_service(name, inst),
+                    n_iters=REQUESTS, kind="inference", utilization=0.2,
+                )
+            )
+    st = executor.registry.stats()
+    n = len(services)
+    print(f"packed {n - st['queued']}/{n} services into ONE device "
+          f"({st['n_lanes']} lanes, {st['persistent_used']/2**20:.0f} MiB persistent, "
+          f"{st['free']/2**30:.2f} GiB free)")
+    print(f"no-sharing deployment would need {n} devices -> "
+          f"{n / max(1, 1 + (1 if st['queued'] else 0))}x fewer here")
+
+    t0 = time.perf_counter()
+    report = vdev.run()
+    dt = time.perf_counter() - t0
+    done = sum(s.iterations_done for s in report.stats.values())
+    print(f"served {done} requests in {dt:.1f}s; per-service mean latency:")
+    for sess in services[:6]:
+        s = report.stats[sess.job.job_id]
+        if s.iterations_done:
+            print(f"  {sess.name:22s} {s.service_time/s.iterations_done*1e3:7.1f} ms/req")
+
+
+if __name__ == "__main__":
+    main()

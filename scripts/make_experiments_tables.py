@@ -1,0 +1,44 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from the dry-run
+JSON reports. Usage: python scripts/make_experiments_tables.py"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+DRY = Path("experiments/dryrun")
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def main():
+    reports = []
+    for p in sorted(DRY.glob("*.json")):
+        try:
+            r = json.loads(p.read_text())
+            if "tag" not in r:
+                reports.append(r)
+        except json.JSONDecodeError:
+            pass
+    reports.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    print("| arch | shape | mesh | peak GiB (proj/meas) | fits | compute s | memory s | collective s | dominant | useful FLOPs | coll bytes/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in reports:
+        t = r["roofline"]
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {fmt_bytes(r['peak_bytes_projected_tpu'])} / {fmt_bytes(r['peak_bytes_per_device'])} "
+            f"| {'Y' if r['fits_16GB'] else 'N'} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} | {t['collective_s']:.4f} "
+            f"| **{t['dominant']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {r['collectives']['total_bytes']:.3g} |"
+        )
+    n_fit = sum(r["fits_16GB"] for r in reports)
+    print(f"\n{len(reports)} cells; {n_fit} fit 16 GiB/chip (projected).")
+
+
+if __name__ == "__main__":
+    main()

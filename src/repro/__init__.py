@@ -1,0 +1,4 @@
+"""repro: Salus fine-grained accelerator sharing primitives on TPU/JAX,
+plus the multi-arch training/serving substrate it schedules."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,92 @@
+"""Architecture registry: ``get_config(name)`` / ``--arch <id>``."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import (
+    ArchConfig,
+    ShapeConfig,
+    SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+    batch_spec,
+)
+
+from repro.configs.hymba_1p5b import CONFIG as HYMBA_1P5B
+from repro.configs.qwen3_moe_235b import CONFIG as QWEN3_MOE_235B
+from repro.configs.mixtral_8x22b import CONFIG as MIXTRAL_8X22B
+from repro.configs.musicgen_medium import CONFIG as MUSICGEN_MEDIUM
+from repro.configs.qwen1p5_32b import CONFIG as QWEN1P5_32B
+from repro.configs.qwen3_8b import CONFIG as QWEN3_8B
+from repro.configs.gemma_2b import CONFIG as GEMMA_2B
+from repro.configs.qwen2_72b import CONFIG as QWEN2_72B
+from repro.configs.rwkv6_7b import CONFIG as RWKV6_7B
+from repro.configs.qwen2_vl_72b import CONFIG as QWEN2_VL_72B
+
+ARCHS: Dict[str, ArchConfig] = {
+    c.name: c
+    for c in (
+        HYMBA_1P5B,
+        QWEN3_MOE_235B,
+        MIXTRAL_8X22B,
+        MUSICGEN_MEDIUM,
+        QWEN1P5_32B,
+        QWEN3_8B,
+        GEMMA_2B,
+        QWEN2_72B,
+        RWKV6_7B,
+        QWEN2_VL_72B,
+    )
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name.endswith("-smoke"):
+        return get_config(name[: -len("-smoke")]).smoke()
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def all_cells() -> List[tuple]:
+    """Every runnable (arch, shape) cell of the assignment matrix."""
+    cells = []
+    for arch in ARCHS.values():
+        for shape in SHAPES.values():
+            if arch.supports(shape):
+                cells.append((arch, shape))
+    return cells
+
+
+def skipped_cells() -> List[tuple]:
+    return [
+        (a, s)
+        for a in ARCHS.values()
+        for s in SHAPES.values()
+        if not a.supports(s)
+    ]
+
+
+__all__ = [
+    "ArchConfig",
+    "ShapeConfig",
+    "ARCHS",
+    "SHAPES",
+    "get_config",
+    "get_shape",
+    "all_cells",
+    "skipped_cells",
+    "batch_spec",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+]

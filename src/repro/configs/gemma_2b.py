@@ -1,0 +1,23 @@
+"""gemma-2b — dense, GeGLU, MQA (kv=1), head_dim=256 [arXiv:2403.08295].
+
+18L d_model=2048 8H (kv=1) d_ff=16384 vocab=256000. Tied embeddings scaled
+by sqrt(d_model). Full attention => long_500k skipped.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma-2b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    gated_act="gelu",
+    rope_variant="rope",
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    scale_embeddings=True,
+)

@@ -1,0 +1,29 @@
+"""hymba-1.5b — hybrid parallel attention + Mamba heads [arXiv:2411.13676].
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+Attention branch uses sliding-window attention (Hymba applies SWA to most
+layers); the Mamba branch runs in parallel on the same input and the two
+branch outputs are mean-fused (normalized per branch, as in the paper).
+Sub-quadratic => runs long_500k.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_conv=4,
+    sliding_window=1024,
+    gated_act="silu",
+    rope_variant="rope",
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,24 @@
+"""musicgen-medium — decoder-only transformer over EnCodec audio tokens
+[arXiv:2306.05284].
+
+48L d_model=1536 24H (MHA, kv=24) d_ff=6144 vocab=2048 (EnCodec codebook).
+The EnCodec frontend is a STUB: ``input_specs()`` provides precomputed frame
+embeddings (batch, seq, d_model); the backbone is the transformer only.
+Full attention => long_500k skipped.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    gated_act="gelu",
+    rope_variant="none",  # musicgen uses learned sinusoidal; we stub with none
+    frontend="audio_frames",
+)

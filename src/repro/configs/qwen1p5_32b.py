@@ -1,0 +1,22 @@
+"""qwen1.5-32b — dense, MHA with QKV bias [hf:Qwen/Qwen1.5 family].
+
+64L d_model=5120 40H (kv=40) d_ff=27392 vocab=152064.
+Full attention => long_500k skipped.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    head_dim=128,
+    d_ff=27392,
+    vocab_size=152064,
+    qkv_bias=True,
+    gated_act="silu",
+    rope_variant="rope",
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,27 @@
+"""qwen2-vl-72b — VLM: qwen2-72b backbone + M-RoPE [arXiv:2409.12191].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064.
+The vision tower is a STUB: ``input_specs()`` provides precomputed patch
+embeddings (dynamic-resolution ViT output), which the backbone splices in
+front of the text tokens; positions are 3-D (temporal, height, width)
+multimodal RoPE ids. Full attention => long_500k skipped.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    qkv_bias=True,
+    gated_act="silu",
+    rope_variant="mrope",
+    rope_theta=1_000_000.0,
+    frontend="vision_patches",
+    n_frontend_tokens=256,
+)

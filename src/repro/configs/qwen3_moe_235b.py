@@ -1,0 +1,24 @@
+"""qwen3-moe-235b-a22b — MoE, 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B family].
+
+94L d_model=4096 64H (GQA kv=4) per-expert d_ff=1536 vocab=151936.
+qk_norm per Qwen3. Full attention => long_500k skipped (see DESIGN.md §4).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=151936,
+    n_experts=128,
+    top_k=8,
+    qk_norm=True,
+    gated_act="silu",
+    rope_variant="rope",
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,20 @@
+"""rwkv6-7b (Finch) — attention-free, data-dependent decay [arXiv:2404.05892].
+
+32L d_model=4096 d_ff=14336 vocab=65536. Time-mix heads of size 64
+(64 heads). Recurrent state => constant-memory decode => runs long_500k.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,   # d_model / rwkv_head_dim
+    n_kv_heads=0,  # attention-free
+    head_dim=64,
+    d_ff=14336,
+    vocab_size=65536,
+    rwkv_head_dim=64,
+    rope_variant="none",
+)

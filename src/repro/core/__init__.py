@@ -1,0 +1,37 @@
+"""Salus core: fine-grained accelerator sharing primitives.
+
+Public surface:
+  * :class:`LaneRegistry` — GPU lanes, Algorithm 1, safety condition, defrag
+  * policies — FIFO / SRTF / PACK / FAIR (``get_policy``)
+  * :class:`Simulator` — discrete-event trace evaluation
+  * :class:`SalusExecutor` + :class:`VirtualDevice` — live execution service
+  * profiles / tracegen — workload tables + trace generation
+"""
+from repro.core.adaptor import VirtualDevice
+from repro.core.executor import SalusExecutor
+from repro.core.lanes import Lane, LaneRegistry, SafetyViolation
+from repro.core.scheduler import FAIR, FIFO, PACK, SRTF, Policy, get_policy
+from repro.core.simulator import SimResult, Simulator
+from repro.core.types import GB, MB, JobSpec, JobState, JobStats, MemoryProfile
+
+__all__ = [
+    "VirtualDevice",
+    "SalusExecutor",
+    "Lane",
+    "LaneRegistry",
+    "SafetyViolation",
+    "FIFO",
+    "SRTF",
+    "PACK",
+    "FAIR",
+    "Policy",
+    "get_policy",
+    "Simulator",
+    "SimResult",
+    "JobSpec",
+    "JobState",
+    "JobStats",
+    "MemoryProfile",
+    "GB",
+    "MB",
+]

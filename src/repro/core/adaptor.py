@@ -1,0 +1,59 @@
+"""Framework adaptor (paper Fig. 3): users keep their training scripts; the
+adaptor presents Salus as a virtual device.
+
+    vdev = VirtualDevice(executor)
+    sess = vdev.create_session(step_fn, state, data_fn, n_iters)   # (1a,1b)
+    vdev.run()                                                     # (2a,2b)
+
+Memory profiles are measured automatically by compiling one step
+(``profiles.profile_executable``) when not supplied — the adaptor is the
+only component that touches jit/compile, keeping user code unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.core.executor import ExecutorReport, SalusExecutor
+from repro.core.profiles import profile_executable
+from repro.core.session import Session
+from repro.core.types import MemoryProfile
+
+
+class VirtualDevice:
+    def __init__(self, executor: SalusExecutor):
+        self.executor = executor
+        self._sessions = []
+
+    def create_session(
+        self,
+        name: str,
+        step_fn: Callable,
+        init_state: Any,
+        data_fn: Callable[[int], Any],
+        n_iters: int,
+        profile: Optional[MemoryProfile] = None,
+        utilization: float = 1.0,
+        kind: str = "train",
+    ) -> Session:
+        jitted = jax.jit(step_fn) if not hasattr(step_fn, "lower") else step_fn
+        if profile is None:
+            compiled = jitted.lower(init_state, data_fn(0)).compile()
+            profile = profile_executable(compiled)
+        sess = Session(
+            name=name,
+            step_fn=jitted,
+            init_state=init_state,
+            data_fn=data_fn,
+            n_iters=n_iters,
+            profile=profile,
+            kind=kind,
+            utilization=utilization,
+        )
+        self._sessions.append(sess)
+        self.executor.submit(sess)
+        return sess
+
+    def run(self, max_wall: Optional[float] = None) -> ExecutorReport:
+        return self.executor.run(max_wall=max_wall)

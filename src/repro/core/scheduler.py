@@ -1,0 +1,114 @@
+"""Iteration schedulers (paper §4): FIFO, SRTF, PACK, FAIR.
+
+A policy answers one question at every iteration boundary: *which job runs
+its next iteration?* Policies are shared verbatim by the discrete-event
+simulator and the live executor.
+
+Two execution regimes (paper §5.1):
+  * ``exclusive``  — at most one iteration in flight device-wide (FIFO's
+    no-sharing baseline; SRTF's single-lane preemption study),
+  * concurrent     — one iteration in flight *per lane* (PACK/FAIR), i.e.
+    serialization within a lane, parallelism across lanes.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.types import JobSpec, JobStats
+
+
+class Policy:
+    name: str = "base"
+    exclusive: bool = False
+
+    def select(
+        self,
+        candidates: List[JobSpec],
+        stats: Dict[int, JobStats],
+        now: float,
+    ) -> Optional[JobSpec]:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"<{type(self).__name__}>"
+
+
+class FIFO(Policy):
+    """Arrival order, run to completion, no sharing — the de-facto baseline
+    (today's cluster behavior; subject to HOL blocking)."""
+
+    name = "fifo"
+    exclusive = True
+
+    def select(self, candidates, stats, now):
+        if not candidates:
+            return None
+        return min(candidates, key=lambda j: (j.arrival_time, j.job_id))
+
+
+class SRTF(Policy):
+    """Preemptive shortest-remaining-time-first. Remaining time is
+    (n_iters - done) * iter_time; duration assumed known (paper assumes an
+    Optimus-style estimator [41]). Preemption happens naturally at the next
+    iteration boundary: the paused job's persistent memory stays resident,
+    so resuming costs nothing (fast job switching, §3.2)."""
+
+    name = "srtf"
+    exclusive = True
+
+    def select(self, candidates, stats, now):
+        if not candidates:
+            return None
+
+        def remaining(j: JobSpec) -> float:
+            done = stats[j.job_id].iterations_done if j.job_id in stats else 0
+            return (j.n_iters - done) * j.iter_time
+
+        return min(candidates, key=lambda j: (remaining(j), j.arrival_time, j.job_id))
+
+
+class PACK(Policy):
+    """Run every admitted lane concurrently to maximize utilization /
+    minimize makespan. Within a lane: arrival order (work-conserving)."""
+
+    name = "pack"
+    exclusive = False
+
+    def select(self, candidates, stats, now):
+        if not candidates:
+            return None
+        return min(candidates, key=lambda j: (j.arrival_time, j.job_id))
+
+
+class FAIR(Policy):
+    """Equalize the service *rate since arrival* across the jobs sharing
+    each lane (one of many possible fair policies, per the paper). Rate-
+    based rather than total-service-based so a newly arriving job starts
+    at its fair share immediately instead of starving incumbents until it
+    has retroactively "caught up" (matches the paper's Fig. 11: shares
+    re-equalize at once on arrival/departure)."""
+
+    name = "fair"
+    exclusive = False
+
+    def select(self, candidates, stats, now):
+        if not candidates:
+            return None
+
+        def rate(j: JobSpec) -> float:
+            st = stats.get(j.job_id)
+            if st is None:
+                return 0.0
+            elapsed = max(now - j.arrival_time, 1e-9)
+            return st.service_time / elapsed
+
+        return min(candidates, key=lambda j: (rate(j), j.arrival_time, j.job_id))
+
+
+POLICIES = {p.name: p for p in (FIFO(), SRTF(), PACK(), FAIR())}
+
+
+def get_policy(name: str) -> Policy:
+    if name not in POLICIES:
+        raise KeyError(f"unknown policy {name!r}; known: {sorted(POLICIES)}")
+    return POLICIES[name]

@@ -1,0 +1,202 @@
+"""Discrete-event simulator for Salus traces (paper §5.1 scale).
+
+Faithful to the paper's mechanism:
+  * admission through the lane registry (Algorithm 1 + safety condition),
+  * iteration-granularity scheduling & preemption (a running iteration is
+    never aborted; switches happen at boundaries),
+  * serialization within a lane / concurrency across lanes,
+  * compute-contention model (DESIGN.md §6): an iteration started while
+    lanes A are active takes ``iter_time * max(1, sum_{j in A} u_j)``
+    wall-clock — compute is one shared resource, so packing compute-bound
+    jobs doesn't help (paper Fig. 12 resnet) while packing low-utilization
+    jobs does (superres), and k-way FAIR sharing gives each job 1/k of its
+    solo throughput with constant aggregate (Fig. 11).
+  * optional per-switch latency (``switch_overhead``) to model Salus's small
+    switching cost vs. checkpoint-based switching (Gandiva): used by the
+    overhead/switching benchmarks.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.lanes import Lane, LaneRegistry
+from repro.core.scheduler import Policy
+from repro.core.types import IterationRecord, JobSpec, JobState, JobStats
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)  # arrival | iter_done
+    job: JobSpec = field(compare=False)
+
+
+@dataclass
+class SimResult:
+    stats: Dict[int, JobStats]
+    jobs: Dict[int, JobSpec]
+    records: List[IterationRecord]
+    makespan: float
+    registry_stats: Dict
+
+    # ------------------------------------------------------------------
+    def _collect(self, fn):
+        vals = [fn(s) for s in self.stats.values()]
+        return [v for v in vals if v is not None]
+
+    @property
+    def jcts(self) -> List[float]:
+        return self._collect(lambda s: s.jct)
+
+    @property
+    def avg_jct(self) -> float:
+        v = self.jcts
+        return sum(v) / len(v) if v else 0.0
+
+    @property
+    def p95_jct(self) -> float:
+        v = sorted(self.jcts)
+        return v[int(0.95 * (len(v) - 1))] if v else 0.0
+
+    @property
+    def avg_queuing(self) -> float:
+        v = self._collect(lambda s: s.queuing)
+        return sum(v) / len(v) if v else 0.0
+
+    def summary(self) -> Dict:
+        return {
+            "makespan": self.makespan,
+            "avg_jct": self.avg_jct,
+            "p95_jct": self.p95_jct,
+            "avg_queuing": self.avg_queuing,
+            "n_jobs": len(self.stats),
+            "lane_moves": self.registry_stats.get("moves", 0),
+        }
+
+
+class Simulator:
+    def __init__(
+        self,
+        capacity: int,
+        policy: Policy,
+        switch_overhead: float = 0.0,
+    ):
+        self.registry = LaneRegistry(capacity)
+        self.policy = policy
+        self.switch_overhead = switch_overhead
+
+    def run(self, jobs: List[JobSpec], until: Optional[float] = None) -> SimResult:
+        reg, policy = self.registry, self.policy
+        stats: Dict[int, JobStats] = {}
+        state: Dict[int, JobState] = {}
+        records: List[IterationRecord] = []
+        running_iter: Dict[int, Tuple[JobSpec, float]] = {}  # lane_id -> (job, start)
+        last_on_device: Dict[int, int] = {}  # lane_id -> job_id (switch detection)
+        seq = itertools.count()
+        events: List[_Event] = []
+        now = 0.0
+
+        for job in jobs:
+            stats[job.job_id] = JobStats(arrival_time=job.arrival_time)
+            state[job.job_id] = JobState.QUEUED
+            heapq.heappush(events, _Event(job.arrival_time, next(seq), "arrival", job))
+
+        def active_utilization() -> float:
+            return sum(j.utilization for j, _ in running_iter.values())
+
+        def candidates_in(lane: Lane) -> List[JobSpec]:
+            return [
+                j
+                for j in lane.jobs
+                if state[j.job_id] in (JobState.READY, JobState.PAUSED)
+            ]
+
+        def start_iteration(lane: Lane, job: JobSpec):
+            st = stats[job.job_id]
+            if st.first_run_time is None:
+                st.first_run_time = now
+            if state[job.job_id] == JobState.PAUSED:
+                st.preemptions += 0  # counted when paused
+            state[job.job_id] = JobState.RUNNING
+            overhead = 0.0
+            # switch detection: device-wide for exclusive policies, per-lane
+            # (per GPU stream) for concurrent ones
+            switch_key = 0 if policy.exclusive else lane.lane_id
+            if self.switch_overhead and last_on_device.get(switch_key) != job.job_id:
+                overhead = self.switch_overhead
+            last_on_device[switch_key] = job.job_id
+            # contention freeze at start (see module docstring)
+            contention = max(1.0, active_utilization() + job.utilization)
+            dur = job.iter_time * contention + overhead
+            running_iter[lane.lane_id] = (job, now)
+            heapq.heappush(events, _Event(now + dur, next(seq), "iter_done", job))
+
+        def schedule():
+            """Fill idle lanes (or the idle device, for exclusive policies)."""
+            if policy.exclusive:
+                if running_iter:
+                    # iteration-granularity preemption: let it finish
+                    return
+                ready = [
+                    j
+                    for lane in reg.lanes.values()
+                    for j in candidates_in(lane)
+                ]
+                job = policy.select(ready, stats, now)
+                if job is not None:
+                    lane = reg.assignment[job.job_id]
+                    # mark preemption of jobs that were mid-stream and lost
+                    for other in ready:
+                        if other is not job and stats[other.job_id].iterations_done:
+                            if state[other.job_id] != JobState.PAUSED:
+                                state[other.job_id] = JobState.PAUSED
+                                stats[other.job_id].preemptions += 1
+                    start_iteration(lane, job)
+                return
+            for lane in list(reg.lanes.values()):
+                if lane.lane_id in running_iter:
+                    continue
+                job = policy.select(candidates_in(lane), stats, now)
+                if job is not None:
+                    start_iteration(lane, job)
+
+        def on_admit(job: JobSpec, lane: Lane):
+            st = stats[job.job_id]
+            if st.admit_time is None:
+                st.admit_time = now
+            state[job.job_id] = JobState.READY
+
+        reg.on_admit = on_admit
+
+        while events:
+            ev = heapq.heappop(events)
+            now = ev.time
+            if until is not None and now > until:
+                break
+            if ev.kind == "arrival":
+                reg.job_arrive(ev.job)  # may admit instantly (on_admit fires)
+            elif ev.kind == "iter_done":
+                job = ev.job
+                lane = reg.assignment[job.job_id]
+                j, start = running_iter.pop(lane.lane_id)
+                assert j is job
+                st = stats[job.job_id]
+                st.iterations_done += 1
+                st.service_time += now - start
+                records.append(
+                    IterationRecord(job.job_id, st.iterations_done - 1, start, now, lane.lane_id)
+                )
+                if st.iterations_done >= job.n_iters:
+                    state[job.job_id] = JobState.FINISHED
+                    st.finish_time = now
+                    reg.job_finish(job)  # frees lane / admits queued jobs
+                else:
+                    state[job.job_id] = JobState.READY
+            schedule()
+
+        makespan = max((s.finish_time or now) for s in stats.values()) if stats else 0.0
+        return SimResult(stats, {j.job_id: j for j in jobs}, records, makespan, reg.stats())

@@ -1,0 +1,109 @@
+"""Core Salus types: memory profiles, job specs, iteration records, events.
+
+The paper's memory taxonomy (§3.2.1) maps 1:1:
+  * model + framework-internal  -> MemoryProfile.persistent
+  * ephemeral (per-iteration)   -> MemoryProfile.ephemeral
+On the JAX/XLA side these are measured from a compiled executable:
+persistent = argument (param/optimizer buffers) + generated-code size,
+ephemeral = temp arena + output buffers (see profiles.profile_executable).
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+MB = 1024 * 1024
+GB = 1024 * MB
+
+
+@dataclass(frozen=True)
+class MemoryProfile:
+    """P_i and E_i of a job, in bytes."""
+
+    persistent: int
+    ephemeral: int
+
+    @property
+    def total(self) -> int:
+        return self.persistent + self.ephemeral
+
+
+@dataclass
+class JobSpec:
+    """One DL job submitted to Salus (a training run or an inference
+    service). Iteration-granularity: the job is ``n_iters`` iterations of
+    ``iter_time`` seconds each when running alone."""
+
+    name: str
+    profile: MemoryProfile
+    n_iters: int
+    iter_time: float  # seconds, solo
+    utilization: float = 1.0  # fraction of device compute used when solo
+    arrival_time: float = 0.0
+    kind: str = "train"  # train | inference
+    # Optional live-execution payload (set by the adaptor):
+    run_iteration: Optional[Callable[[int], Any]] = None
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    _ids = itertools.count()
+
+    def __post_init__(self):
+        self.job_id = next(JobSpec._ids)
+        if not (0.0 < self.utilization <= 1.0):
+            raise ValueError(f"utilization must be in (0, 1], got {self.utilization}")
+
+    @property
+    def total_work(self) -> float:
+        return self.n_iters * self.iter_time
+
+    def __hash__(self):
+        return hash(self.job_id)
+
+    def __eq__(self, other):
+        return isinstance(other, JobSpec) and other.job_id == self.job_id
+
+
+class JobState(enum.Enum):
+    QUEUED = "queued"  # waiting for a lane (memory admission)
+    READY = "ready"  # has a lane, waiting for scheduler
+    RUNNING = "running"  # executing an iteration
+    PAUSED = "paused"  # preempted at an iteration boundary
+    FINISHED = "finished"
+
+
+@dataclass
+class JobStats:
+    arrival_time: float = 0.0
+    admit_time: Optional[float] = None  # got a lane
+    first_run_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    iterations_done: int = 0
+    service_time: float = 0.0  # accumulated wall-time of its iterations
+    preemptions: int = 0
+
+    @property
+    def jct(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+    @property
+    def queuing(self) -> Optional[float]:
+        if self.first_run_time is None:
+            return None
+        return self.first_run_time - self.arrival_time
+
+
+@dataclass
+class IterationRecord:
+    job_id: int
+    index: int
+    start: float
+    end: float
+    lane_id: int
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start

@@ -1,0 +1,178 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation of the FlashAttention blocking scheme (the paper's GPU
+SRAM tiling rethought for VMEM + the MXU):
+  * grid = (batch, q_heads, q_blocks, k_blocks); the TPU grid executes
+    sequentially on a core, so the online-softmax running state (m, l, acc)
+    lives in VMEM scratch and persists across the k_block (minor) axis;
+  * BlockSpecs tile q/k/v/o to (1, 1, block, head_dim) VMEM slabs with
+    MXU-friendly block sizes (multiples of 128 on the contracted dims);
+  * GQA is handled by the k/v index_map (kv head = q head // n_rep) — no
+    KV duplication in HBM;
+  * causal + sliding-window masking is applied inside the block, and blocks
+    entirely outside the (causal, window) band are skipped via pl.when —
+    the same work-skipping the CUDA kernel gets from early exit.
+
+Numerics: fp32 softmax state; output cast to the value dtype.
+Validated in interpret mode on CPU against ``ref.attention_ref`` (the
+harness's Pallas-on-TPU contract: interpret=True executes the same kernel
+body on CPU).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e38
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    seq_k: int,
+    causal: bool,
+    window: Optional[int],
+    q_offset: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # ---- block-level skip: is any (q, k) pair in this tile live? ----
+    q_start = iq * block_q + q_offset  # absolute position of first query
+    k_start = ik * block_k
+    live = jnp.asarray(True)
+    if causal:
+        # earliest key in block must not exceed latest query
+        live = jnp.logical_and(live, k_start <= q_start + block_q - 1)
+    if window is not None and window > 0:
+        # latest key in block must be within the window of the last query...
+        # keys valid iff k > q - window for some q in block
+        live = jnp.logical_and(
+            live, k_start + block_k - 1 > q_start - window
+        )
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (block_q, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (block_k, d)
+        v = v_ref[0, 0].astype(jnp.float32)  # (block_k, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (block_q, block_k)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        if window is not None and window > 0:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # (block_q, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        # fully-masked rows: m_new stays NEG_INF -> p would be exp(0)=1; zero them
+        p = jnp.where(m_new > NEG_INF / 2, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        corr = jnp.where(m_prev > NEG_INF / 2, corr, 0.0)
+        l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = corr * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "window",
+        "block_q",
+        "block_k",
+        "q_offset",
+        "interpret",
+    ),
+)
+def flash_attention_bhsd(
+    q: jnp.ndarray,  # (b, hq, sq, d)
+    k: jnp.ndarray,  # (b, hkv, sk, d)
+    v: jnp.ndarray,  # (b, hkv, sk, d)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    n_rep = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    if sq % block_q or sk % block_k:
+        raise ValueError(f"seq ({sq},{sk}) must divide blocks ({block_q},{block_k})")
+    grid = (b, hq, sq // block_q, sk // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=1.0 / math.sqrt(d),
+        block_q=block_q,
+        block_k=block_k,
+        seq_k=sk,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda ib, ih, iq, ik, n_rep=n_rep: (ib, ih // n_rep, ik, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda ib, ih, iq, ik, n_rep=n_rep: (ib, ih // n_rep, ik, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),  # m: running row max
+            pltpu.VMEM((block_q, 1), jnp.float32),  # l: running row sum
+            pltpu.VMEM((block_q, d), jnp.float32),  # acc: running output
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash-attention kernel: exact softmax attention
+with GQA head grouping, causal and sliding-window masks. fp32 softmax."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (b, s_q, hq, d)
+    k: jnp.ndarray,  # (b, s_k, hkv, d)
+    v: jnp.ndarray,  # (b, s_k, hkv, d)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    n_rep = hq // hkv
+    qg = q.reshape(b, sq, hkv, n_rep, d)
+    logits = jnp.einsum(
+        "bqhrd,bkhd->bhrqk", qg, k, preferred_element_type=jnp.float32
+    ) * (d ** -0.5)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window is not None and window > 0:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, d)

@@ -1,0 +1,21 @@
+"""Oracle: RMSNorm with optional fused residual add (fp32 statistics)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(
+    x: jnp.ndarray,  # (..., d)
+    scale: jnp.ndarray,  # (d,)
+    residual: Optional[jnp.ndarray] = None,
+    eps: float = 1e-6,
+) -> jnp.ndarray:
+    if residual is not None:
+        x = x + residual
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,33 @@
+"""jit'd public wrapper for the WKV6 kernel: model layout (b, s, h, d) <->
+kernel layout (b, h, s, d), interpret selection on CPU."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv_scan.kernel import wkv6_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def wkv6(
+    r: jnp.ndarray,  # (b, s, h, dk)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,  # (h, dk)
+    *,
+    chunk: int = 64,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if interpret is None:
+        interpret = not _on_tpu()
+    tr = lambda t: jnp.swapaxes(t, 1, 2).astype(jnp.float32)
+    o, s_final = wkv6_bhsd(
+        tr(r), tr(k), tr(v), tr(w), u.astype(jnp.float32), chunk=chunk, interpret=interpret
+    )
+    return jnp.swapaxes(o, 1, 2), s_final

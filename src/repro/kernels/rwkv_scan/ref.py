@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the WKV6 kernel: step-by-step linear recurrence.
+
+    o_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(
+    r: jnp.ndarray,  # (b, s, h, dk) fp32
+    k: jnp.ndarray,
+    v: jnp.ndarray,  # (b, s, h, dv)
+    w: jnp.ndarray,  # (b, s, h, dk), decay in (0, 1)
+    u: jnp.ndarray,  # (h, dk)
+    s0: Optional[jnp.ndarray] = None,  # (b, h, dk, dv)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[..., :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_final, os = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(os, 0, 1), s_final

@@ -1,0 +1,384 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the step function partitions over the production mesh (single-pod
+    16x16 and multi-pod 2x16x16),
+  * per-device memory fits (memory_analysis),
+  * and collects the cost/collective numbers the roofline analysis reads.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all                  # every runnable cell
+  python -m repro.launch.dryrun --all --multi-pod
+Outputs one JSON per cell under --out (default experiments/dryrun).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, batch_spec, get_config, get_shape
+from repro.dist.api import use_sharding
+from repro.dist.sharding import (
+    batch_shardings,
+    cache_shardings,
+    make_context,
+    param_shardings,
+    replicated,
+)
+from repro.launch.hlo_analysis import parse_collectives, roofline_terms
+from repro.launch.hlo_flops import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.train.optimizer import AdamW
+from repro.train.runtime import (
+    adamw_config_for,
+    model_options_for,
+    train_run_config_for,
+)
+from repro.train.serve_step import make_decode_step, make_prefill_step
+from repro.train.train_step import make_train_step
+
+
+def _sds(tree, shardings):
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        tree,
+        shardings,
+    )
+
+
+def _batch_sds(arch, shape, mesh):
+    spec = batch_spec(arch, shape)
+    sh = batch_shardings(arch, shape, mesh)
+    return {
+        k: jax.ShapeDtypeStruct(shp, jnp.dtype(dt), sharding=sh[k])
+        for k, (shp, dt) in spec.items()
+    }
+
+
+def _drop_data(shardings):
+    """Param shardings with the 'data' axis removed (local-accum grads)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def drop(s):
+        spec = tuple(
+            None
+            if ax == "data" or (isinstance(ax, tuple) and "data" in ax)
+            else ax
+            for ax in s.spec
+        )
+        return NamedSharding(s.mesh, P(*spec))
+
+    return jax.tree_util.tree_map(drop, shardings)
+
+
+def lower_cell(
+    arch_name: str,
+    shape_name: str,
+    multi_pod: bool,
+    kernel_mode: str = "reference",
+    local_grad_accum: bool = False,
+    microbatch_override: int = 0,
+    kv_quantized: bool | None = None,
+    zero3: bool = False,
+):
+    """Build + lower + compile one cell; returns (lowered, compiled, meta)."""
+    arch = get_config(arch_name)
+    shape = get_shape(shape_name)
+    if not arch.supports(shape):
+        raise ValueError(f"{arch.name} skips {shape.name} (full attention @500k)")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_context(mesh, arch, zero3=zero3)
+    opts = model_options_for(arch, shape, kernel_mode=kernel_mode)
+    if kv_quantized is not None:
+        opts.kv_quantized = kv_quantized
+    model = build_model(arch, opts)
+    rng = jax.random.PRNGKey(0)
+
+    with mesh, use_sharding(ctx):
+        aparams = jax.eval_shape(model.init, rng)
+        p_sh = param_shardings(aparams, arch, mesh, serve=shape.kind != "train")
+        params = _sds(aparams, p_sh)
+        batch = _batch_sds(arch, shape, mesh)
+
+        if shape.kind == "train":
+            opt = AdamW(adamw_config_for(arch))
+            run = train_run_config_for(arch, shape)
+            if microbatch_override:
+                import dataclasses
+
+                run = dataclasses.replace(run, num_microbatches=microbatch_override)
+            if local_grad_accum:
+                import dataclasses
+
+                run = dataclasses.replace(
+                    run, grad_accum_shardings=_drop_data(p_sh)
+                )
+            aopt = jax.eval_shape(opt.init, aparams)
+            o_sh = param_shardings(aopt, arch, mesh)
+            opt_state = _sds(aopt, o_sh)
+            step = make_train_step(model, opt, run)
+            metrics_sh = {k: replicated(mesh) for k in ("lr", "grad_norm", "step", "loss")}
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, {k: v.sharding for k, v in batch.items()}),
+                out_shardings=(p_sh, o_sh, metrics_sh),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params, opt_state, batch)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model, max_len=shape.seq_len)
+            jitted = jax.jit(step)
+            lowered = jitted.lower(params, batch)
+        else:  # decode (cache in the scan carry; DUS aliases in place)
+            acache = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            c_sh = cache_shardings(acache, arch, shape, mesh)
+            cache = _sds(acache, c_sh)
+            pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=replicated(mesh))
+            step = make_decode_step(model)
+            jitted = jax.jit(
+                step,
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params, batch, cache, pos)
+
+        compiled = lowered.compile()
+    abstract_inputs = [aparams, batch]
+    if shape.kind == "decode":
+        abstract_inputs.append(acache)
+    meta = {
+        "arch": arch.name,
+        "shape": shape.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "abstract_inputs": abstract_inputs,
+    }
+    return lowered, compiled, mesh, meta
+
+
+def analyze(compiled, mesh, arch_name: str, shape_name: str, abstract_inputs=None) -> dict:
+    arch = get_config(arch_name)
+    shape = get_shape(shape_name)
+    n_dev = mesh.size
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    # loop-aware analysis: XLA's cost_analysis visits while bodies once,
+    # so scans (layers/microbatches/chunks) are undercounted by their trip
+    # counts — analyze_hlo multiplies through the call graph.
+    rep = analyze_hlo(compiled.as_text())
+    flops = rep.flops
+    hbm_bytes = rep.hbm_bytes
+    terms = roofline_terms(flops, hbm_bytes, rep.collective_bytes)
+    # useful-FLOPs ratio
+    n_active = arch.active_param_count()
+    tokens = shape.tokens_per_step
+    mult = 6.0 if shape.kind == "train" else 2.0
+    model_flops_device = mult * n_active * tokens / n_dev
+    mem = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+    }
+    peak = mem["argument_bytes"] + mem["output_bytes"] + mem["temp_bytes"] - mem["alias_bytes"]
+    # XLA-CPU-only artifact: hoisted f32 twins of bf16 weights/caches (TPU
+    # MXUs eat bf16 natively). Quantified per-buffer from the HLO; both the
+    # measured and the TPU-projected peak are reported.
+    upcast = 0
+    if abstract_inputs is not None:
+        from repro.launch.hlo_flops import cpu_upcast_bytes
+
+        bf16_counts = {
+            leaf.size
+            for leaf in jax.tree_util.tree_leaves(abstract_inputs)
+            if hasattr(leaf, "dtype") and leaf.dtype == jnp.bfloat16
+        }
+        # leaves are GLOBAL shapes; per-device counts divide by shard count.
+        per_dev = set()
+        for n in bf16_counts:
+            for denom in (1, mesh.shape["model"], n_dev // (mesh.shape.get("pod", 1)), n_dev):
+                if denom and n % denom == 0:
+                    per_dev.add(n // denom)
+        upcast = cpu_upcast_bytes(compiled.as_text(), per_dev)
+        # decode only: donated cache leaves copied at the while boundary
+        # (TPU aliases them away; see hlo_flops.loop_copy_bytes)
+        if shape.kind == "decode" and len(abstract_inputs) >= 3:
+            from repro.launch.hlo_flops import loop_copy_bytes
+
+            mshape = dict(mesh.shape)
+            denom = mshape.get("data", 1) * mshape.get("model", 1) * mshape.get("pod", 1)
+
+            sigs = []
+            denoms = {
+                mshape.get("data", 1) * mshape.get("model", 1),
+                mshape.get("pod", 1) * mshape.get("data", 1) * mshape.get("model", 1),
+            }
+            for leaf in jax.tree_util.tree_leaves(abstract_inputs[2]):
+                n = leaf.size
+                dt = {"int8": "s8", "float16": "f16", "bfloat16": "bf16",
+                      "float32": "f32"}.get(str(leaf.dtype), str(leaf.dtype))
+                for d in denoms:  # plausible per-device shard sizes
+                    if n % d == 0:
+                        sigs.append((dt, n // d))
+            upcast += loop_copy_bytes(compiled.as_text(), sigs)
+    # Projection: keep args + unaliased outputs, replace temp with
+    # max(1 GiB working-set floor, temp - attributed-upcast bytes). The
+    # attribution sums every f32-twin instance; actual liveness is lower,
+    # so the floor keeps the projection conservative. Both numbers are
+    # reported; EXPERIMENTS.md §Dry-run documents the convention.
+    floor = 1 * 1024**3
+    temp_projected = max(floor, mem["temp_bytes"] - upcast) if upcast else mem["temp_bytes"]
+    peak_projected = (
+        mem["argument_bytes"] + mem["output_bytes"] - mem["alias_bytes"] + temp_projected
+    )
+    peak_projected = min(peak, peak_projected)
+    return {
+        "arch": arch.name,
+        "shape": shape.name,
+        "n_devices": n_dev,
+        "memory": mem,
+        "peak_bytes_per_device": peak,
+        "cpu_upcast_bytes": int(upcast),
+        "peak_bytes_projected_tpu": int(peak_projected),
+        "fits_16GB": peak_projected <= 16 * 1024**3,
+        "fits_16GB_cpu_measured": peak <= 16 * 1024**3,
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm_bytes,
+        "collectives": {
+            "counts": {k: int(v) for k, v in rep.collective_counts.items()},
+            "bytes_by_op": rep.collective_bytes_by_op,
+            "total_bytes": rep.collective_bytes,
+            "unknown_loops": rep.unknown_loops,
+        },
+        "xla_cost_analysis": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        "roofline": terms,
+        "model_flops_per_device": model_flops_device,
+        "useful_flops_ratio": model_flops_device / flops if flops else 0.0,
+    }
+
+
+def run_cell(
+    arch_name,
+    shape_name,
+    multi_pod,
+    out_dir,
+    kernel_mode="reference",
+    tag="",
+    **cell_kwargs,
+):
+    t0 = time.time()
+    lowered, compiled, mesh, meta = lower_cell(
+        arch_name, shape_name, multi_pod, kernel_mode, **cell_kwargs
+    )
+    report = analyze(
+        compiled, mesh, arch_name, shape_name,
+        abstract_inputs=meta["abstract_inputs"],
+    )
+    report["mesh"] = meta["mesh"]
+    report["compile_s"] = time.time() - t0
+    report["kernel_mode"] = kernel_mode
+    if tag:
+        report["tag"] = tag
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = out_dir / f"{arch_name}__{shape_name}__{meta['mesh']}{suffix}.json"
+    path.write_text(json.dumps(report, indent=2))
+    r = report["roofline"]
+    print(
+        f"OK {arch_name:22s} {shape_name:12s} {meta['mesh']:8s} "
+        f"peak={report['peak_bytes_projected_tpu']/2**30:6.2f}GiB fits={report['fits_16GB']} "
+        f"compute={r['compute_s']*1e3:9.3f}ms memory={r['memory_s']*1e3:9.3f}ms "
+        f"coll={r['collective_s']*1e3:9.3f}ms dom={r['dominant']:10s} "
+        f"useful={report['useful_flops_ratio']*100:5.1f}% ({report['compile_s']:.0f}s)"
+    )
+    # paper requirement: print the raw analyses
+    if os.environ.get("REPRO_DRYRUN_VERBOSE"):
+        print(compiled.memory_analysis())
+        print(compiled.cost_analysis())
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--kernel-mode", default="reference")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--local-grad-accum", action="store_true")
+    ap.add_argument("--zero3", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--kv-bf16", action="store_true", help="disable int8 KV")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in ARCHS.values():
+            for s in SHAPES.values():
+                if a.supports(s):
+                    cells.append((a.name, s.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for mp in meshes:
+        for arch_name, shape_name in cells:
+            mesh_tag = "2x16x16" if mp else "16x16"
+            suffix = f"__{args.tag}" if args.tag else ""
+            out_path = Path(args.out) / f"{arch_name}__{shape_name}__{mesh_tag}{suffix}.json"
+            if args.skip_existing and out_path.exists():
+                print(f"SKIP {arch_name} {shape_name} {mesh_tag} (exists)")
+                continue
+            try:
+                run_cell(
+                    arch_name, shape_name, mp, args.out, args.kernel_mode, args.tag,
+                    local_grad_accum=args.local_grad_accum,
+                    microbatch_override=args.microbatches,
+                    kv_quantized=False if args.kv_bf16 else None,
+                    zero3=args.zero3,
+                )
+            except Exception as e:  # noqa: BLE001 - report all cell failures
+                failures.append((arch_name, shape_name, mesh_tag, repr(e)))
+                print(f"FAIL {arch_name} {shape_name} {mesh_tag}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f)
+        sys.exit(1)
+    print("\nall cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Parse compiled HLO text for collective traffic + roofline terms.
+
+``cost_analysis()`` gives per-device FLOPs/bytes but no collective volume;
+we recover it from ``compiled.as_text()`` by building a symbol table of
+instruction output types and summing operand sizes for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(counting ``-start`` and bare forms once; ``-done`` ops are skipped).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\(")
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    bytes_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.counts.values())
+
+    def as_dict(self) -> Dict:
+        return {
+            "counts": dict(self.counts),
+            "bytes_by_op": dict(self.bytes_by_op),
+            "total_bytes": self.total_bytes,
+            "total_count": self.total_count,
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    # pass 1: symbol table name -> output bytes
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            sizes[m.group(1)] = _type_bytes(m.group(2))
+    stats = CollectiveStats()
+    # pass 2: collectives; sum operand sizes
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.groups()
+        base = None
+        for op in COLLECTIVE_OPS:
+            if opcode == op or opcode == op + "-start":
+                base = op
+                break
+        if base is None:
+            continue
+        # operand list: text between the first '(' after opcode and the
+        # matching ')': operands are %refs (types may be inline)
+        rest = line[m.end():]
+        depth, end = 1, 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = rest[:end]
+        op_bytes = 0
+        names = re.findall(r"%([\w.\-]+)", operands)
+        if names:
+            for nm in names:
+                op_bytes += sizes.get(nm, 0)
+        if op_bytes == 0:
+            # fall back to inline operand types, else output size
+            op_bytes = _type_bytes(operands) or _type_bytes(type_str)
+        stats.counts[base] = stats.counts.get(base, 0) + 1
+        stats.bytes_by_op[base] = stats.bytes_by_op.get(base, 0) + op_bytes
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def roofline_terms(
+    flops_per_device: float,
+    hbm_bytes_per_device: float,
+    collective_bytes_per_device: float,
+) -> Dict[str, float]:
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = hbm_bytes_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / ICI_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    bound = max(compute_s, memory_s, collective_s)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "step_lower_bound_s": bound,
+        "roofline_fraction": compute_s / bound if bound > 0 else 0.0,
+    }

@@ -1,0 +1,3 @@
+from repro.models.model import Model, ModelOptions, build_model
+
+__all__ = ["Model", "ModelOptions", "build_model"]

@@ -1,0 +1,431 @@
+"""Attention: GQA/MQA, sliding windows, qk-norm, KV caches (linear + ring).
+
+Three execution paths share one interface:
+  * reference jnp attention (always available; the numerical oracle),
+  * chunked banded attention for sliding windows (exact, sub-quadratic),
+  * the Pallas flash-attention kernel (``repro.kernels.flash_attention``),
+    selected via ``kernel_mode='pallas'`` on TPU targets.
+
+Shapes follow (batch, seq, heads, head_dim) throughout.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.api import constrain, constrain_weight
+from repro.models.layers import (
+    Params,
+    apply_mrope,
+    apply_rope,
+    dense_init,
+    rmsnorm_head,
+)
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def attention_init(rng, cfg: ArchConfig, dtype) -> Params:
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    p: Params = {
+        "wq": dense_init(kq, cfg.d_model, cfg.q_dim, dtype),
+        "wk": dense_init(kk, cfg.d_model, cfg.kv_dim, dtype),
+        "wv": dense_init(kv, cfg.d_model, cfg.kv_dim, dtype),
+        "wo": dense_init(ko, cfg.q_dim, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), dtype)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core softmax attention (reference path)
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+def full_attention(
+    q: jnp.ndarray,  # (b, sq, hq, d)
+    k: jnp.ndarray,  # (b, sk, hkv, d)
+    v: jnp.ndarray,  # (b, sk, hkv, d)
+    *,
+    causal: bool = True,
+    q_offset: int | jnp.ndarray = 0,
+    kv_mask: Optional[jnp.ndarray] = None,  # (b, sk) valid-key mask
+) -> jnp.ndarray:
+    """Exact softmax attention with grouped KV heads. fp32 softmax."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    n_rep = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, sq, hkv, n_rep, d)
+    logits = jnp.einsum(
+        "bqhrd,bkhd->bhrqk", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(k.shape[1])[None, :]
+        mask = qpos >= kpos  # (sq, sk)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    if kv_mask is not None:
+        logits = jnp.where(kv_mask[:, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, d)
+
+
+def causal_chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_chunk: int,
+) -> jnp.ndarray:
+    """Exact causal attention, one query chunk per lax.scan step against the
+    full (masked) key set. The scan bounds live fp32 score memory to one
+    (q_chunk x seq) slab — an unrolled per-chunk loop leaves every chunk's
+    buffers schedulable-concurrently and blows the memory budget at 32k.
+    Cost: the masked rectangle doubles the ideal triangle FLOPs; the
+    Pallas flash-attention kernel (kernel_mode='pallas') removes both the
+    memory AND the waste on real TPUs; useful_flops_ratio reports it."""
+    b, s, hq, d = q.shape
+    if s <= q_chunk or s % q_chunk != 0:
+        return full_attention(q, k, v, causal=True)
+    n_chunks = s // q_chunk
+    qc = jnp.moveaxis(q.reshape(b, n_chunks, q_chunk, hq, d), 1, 0)
+
+    def body(_, inp):
+        q_i, idx = inp
+        o = full_attention(q_i, k, v, causal=True, q_offset=idx * q_chunk)
+        return None, o
+
+    _, outs = jax.lax.scan(body, None, (qc, jnp.arange(n_chunks)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, hq, d)
+
+
+def sliding_window_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    window: int,
+) -> jnp.ndarray:
+    """Exact causal sliding-window attention, computed band-block-wise
+    (scan over query chunks) so the live score tensor is
+    O(window * 2window) rather than O(seq^2).
+
+    Each query chunk of length W attends to its own chunk and the previous
+    chunk, with the (causal AND within-window) mask applied. Numerics match
+    full attention + window mask exactly.
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    if s <= window or s % window != 0:
+        # fall back to masked full attention for short/ragged sequences
+        return _windowed_full(q, k, v, window)
+    w = window
+    n_chunks = s // w
+    n_rep = hq // hkv
+    qc = jnp.moveaxis(q.reshape(b, n_chunks, w, hq, d), 1, 0)
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, w, hkv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, w, hkv, d), 1, 0)
+    # previous chunk for keys/values (zeros before the first chunk)
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:1]), kc[:-1]], axis=0)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:1]), vc[:-1]], axis=0)
+
+    qpos = jnp.arange(w)[:, None] + w  # position within the 2w key window
+    kpos = jnp.arange(2 * w)[None, :]
+    band = (qpos >= kpos) & (kpos > qpos - w)  # causal AND within window
+    first_ok = jnp.arange(2 * w)[None, :] >= w
+
+    def chunk_attn(carry, inp):
+        idx = carry
+        q_i, k_i, v_i, kp, vp = inp  # (b, w, h, d)
+        k2 = jnp.concatenate([kp, k_i], axis=1)  # (b, 2w, hkv, d)
+        v2 = jnp.concatenate([vp, v_i], axis=1)
+        qg = q_i.reshape(b, w, hkv, n_rep, d)
+        logits = jnp.einsum(
+            "bqhrd,bkhd->bhrqk", qg, k2, preferred_element_type=jnp.float32
+        ) * (d ** -0.5)
+        valid = jnp.where(idx == 0, band & first_ok, band)
+        logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhrqk,bkhd->bqhrd", probs.astype(v2.dtype), v2)
+        return idx + 1, o.reshape(b, w, hq, d)
+
+    _, outs = jax.lax.scan(chunk_attn, jnp.zeros((), jnp.int32), (qc, kc, vc, k_prev, v_prev))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, hq, d)
+
+
+def _windowed_full(q, k, v, window):
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    n_rep = hq // hkv
+    qg = q.reshape(b, s, hkv, n_rep, d)
+    logits = jnp.einsum(
+        "bqhrd,bkhd->bhrqk", qg, k, preferred_element_type=jnp.float32
+    ) * (d ** -0.5)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = (qpos >= kpos) & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p: Params, cfg: ArchConfig, x: jnp.ndarray):
+    wq = constrain_weight(p["wq"], (None, "model"))
+    wk = constrain_weight(p["wk"], (None, "model"))
+    wv = constrain_weight(p["wv"], (None, "model"))
+    q = jnp.einsum("...d,de->...e", x, wq)
+    k = jnp.einsum("...d,de->...e", x, wk)
+    v = jnp.einsum("...d,de->...e", x, wv)
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    b, s = x.shape[0], x.shape[1]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm_head(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_head(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def _apply_positions(cfg: ArchConfig, q, k, positions):
+    if cfg.rope_variant == "none":
+        return q, k
+    if cfg.rope_variant == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+        return q, k
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def attention_apply(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # (b, s, d_model)
+    positions: jnp.ndarray,  # rope: (b, s); mrope: (b, 3, s)
+    *,
+    kernel_mode: str = "reference",
+    q_chunk: int = 4096,
+) -> jnp.ndarray:
+    """Training / prefill path over the full sequence (causal)."""
+    q, k, v = _project_qkv(p, cfg, x)
+    q, k = _apply_positions(cfg, q, k, positions)
+    q = constrain(q, ("data", None, "model", None))
+    k = constrain(k, ("data", None, None, None))
+    v = constrain(v, ("data", None, None, None))
+    s = x.shape[1]
+    if kernel_mode == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(
+            q, k, v, causal=True, window=cfg.sliding_window or None
+        )
+    elif cfg.sliding_window > 0:
+        out = sliding_window_attention(q, k, v, cfg.sliding_window)
+    elif s > q_chunk:
+        out = causal_chunked_attention(q, k, v, q_chunk)
+    else:
+        out = full_attention(q, k, v, causal=True)
+    b = x.shape[0]
+    wo = constrain_weight(p["wo"], ("model", None))
+    return jnp.einsum("...e,ed->...d", out.reshape(b, s, cfg.q_dim), wo)
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(
+    cfg: ArchConfig, batch: int, capacity: int, dtype, quantized: bool = False
+) -> Dict:
+    """Per-layer stacked cache. For sliding-window archs the capacity should
+    be the window size (ring buffer); otherwise the max context length.
+
+    ``quantized``: int8 values + one fp16 scale per (token, head) — halves
+    (vs bf16) the dominant HBM consumer of long-context decode. The MHA
+    archs (kv=40 at 32k x 128) do not fit 16 GB/chip any other way."""
+    shape = (cfg.n_layers, batch, capacity, cfg.n_kv_heads, cfg.head_dim)
+    if not quantized:
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    sshape = shape[:-1]
+    return {
+        "k": jnp.zeros(shape, jnp.int8),
+        "v": jnp.zeros(shape, jnp.int8),
+        "k_scale": jnp.zeros(sshape, jnp.float16),
+        "v_scale": jnp.zeros(sshape, jnp.float16),
+    }
+
+
+def quantize_kv(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(..., head_dim) -> int8 values + fp16 per-vector scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def cache_capacity(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.sliding_window > 0:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def decode_attention_chunked(
+    q: jnp.ndarray,  # (b, 1, hq, d)
+    k: jnp.ndarray,  # (b, cap, hkv, d) -- bf16 or int8
+    v: jnp.ndarray,  # (b, cap, hkv, d)
+    kv_mask: jnp.ndarray,  # (b, cap)
+    chunk: int = 2048,
+    scales=None,  # (k_scale, v_scale): (b, cap, hkv) fp16 when int8 cache
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Flash-decoding: online-softmax scan over KV-cache chunks, so the
+    fp32 working set is one (b, chunk) slab instead of the whole cache —
+    the same reason the kernel exists on GPUs, re-expressed as a lax.scan
+    for the XLA scheduler. int8 caches dequantize per chunk."""
+    b, cap, hkv, d = k.shape
+    hq = q.shape[2]
+    n_rep = hq // hkv
+    out_dtype = out_dtype or (v.dtype if scales is None else jnp.bfloat16)
+    if cap % chunk != 0:
+        if scales is not None:
+            k = dequantize_kv(k, scales[0], out_dtype)
+            v = dequantize_kv(v, scales[1], out_dtype)
+        return full_attention(q, k, v, causal=False, kv_mask=kv_mask)
+    n_chunks = cap // chunk
+    scale = d ** -0.5
+    qg = q.reshape(b, 1, hkv, n_rep, d)
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, chunk, hkv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, chunk, hkv, d), 1, 0)
+    mc = jnp.moveaxis(kv_mask.reshape(b, n_chunks, chunk), 1, 0)
+    if scales is not None:
+        ksc = jnp.moveaxis(scales[0].reshape(b, n_chunks, chunk, hkv), 1, 0)
+        vsc = jnp.moveaxis(scales[1].reshape(b, n_chunks, chunk, hkv), 1, 0)
+    else:  # dummy streams keep one scan signature
+        ksc = jnp.zeros((n_chunks, b, 1, 1), jnp.float16)
+        vsc = ksc
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_c, v_c, mask_c, ks_c, vs_c = inp
+        if scales is not None:
+            k_c = dequantize_kv(k_c, ks_c, out_dtype)
+            v_c = dequantize_kv(v_c, vs_c, out_dtype)
+        logits = jnp.einsum(
+            "bqhrd,bkhd->bhrqk", qg, k_c, preferred_element_type=jnp.float32
+        ) * scale  # (b, hkv, n_rep, 1, chunk)
+        logits = jnp.where(mask_c[:, None, None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        corr = jnp.exp(m - m_new)
+        l = corr * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = corr[..., 0] * acc + jnp.einsum(
+            "bhrqk,bkhd->bhrqd", p.astype(v_c.dtype), v_c,
+            preferred_element_type=jnp.float32,
+        )[..., 0, :]
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, n_rep, 1, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, n_rep, 1, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, n_rep, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, mc, ksc, vsc))
+    out = acc / jnp.maximum(l[..., 0], 1e-30)
+    return out.reshape(b, 1, hq, d).astype(out_dtype)
+
+
+def attention_decode(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # (b, 1, d_model)
+    positions: jnp.ndarray,  # (b, 1) or (b, 3, 1) for mrope
+    layer_cache: Dict,  # {"k": (b, cap, hkv, d), "v": (b, cap, hkv, d)}
+    pos: jnp.ndarray,  # scalar int32: tokens cached so far
+) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step against a (possibly ring, possibly int8) KV cache."""
+    q, k_new, v_new = _project_qkv(p, cfg, x)
+    q, k_new = _apply_positions(cfg, q, k_new, positions)
+    quantized = "k_scale" in layer_cache
+    cap = layer_cache["k"].shape[1]
+    if cfg.sliding_window > 0 and cap == cfg.sliding_window:
+        slot = pos % cap  # ring buffer
+        wrapped = True
+    else:
+        slot = jnp.minimum(pos, cap - 1)  # linear cache
+        wrapped = False
+    new_cache = {}
+    if quantized:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        new_cache["k"] = jax.lax.dynamic_update_slice(layer_cache["k"], kq, (0, slot, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(layer_cache["v"], vq, (0, slot, 0, 0))
+        new_cache["k_scale"] = jax.lax.dynamic_update_slice(
+            layer_cache["k_scale"], ks, (0, slot, 0)
+        )
+        new_cache["v_scale"] = jax.lax.dynamic_update_slice(
+            layer_cache["v_scale"], vs, (0, slot, 0)
+        )
+    else:
+        new_cache["k"] = jax.lax.dynamic_update_slice(layer_cache["k"], k_new, (0, slot, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(layer_cache["v"], v_new, (0, slot, 0, 0))
+    # valid-key mask: ring buffers are fully valid once wrapped; linear caches
+    # are valid up to the write slot (inclusive of the new token).
+    idx = jnp.arange(cap)
+    if wrapped:
+        valid = (idx <= slot) | (pos >= cap)
+    else:
+        valid = idx <= slot
+    kv_mask = jnp.broadcast_to(valid[None, :], (x.shape[0], cap))
+    scales = (
+        (new_cache["k_scale"], new_cache["v_scale"]) if quantized else None
+    )
+    if cap >= 8192 or quantized:
+        out = decode_attention_chunked(
+            q, new_cache["k"], new_cache["v"], kv_mask, chunk=min(2048, cap),
+            scales=scales, out_dtype=x.dtype,
+        )
+    else:
+        out = full_attention(q, new_cache["k"], new_cache["v"], causal=False, kv_mask=kv_mask)
+    y = jnp.einsum(
+        "...e,ed->...d", out.reshape(x.shape[0], 1, cfg.q_dim), p["wo"]
+    )
+    return y, new_cache

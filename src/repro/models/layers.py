@@ -1,0 +1,177 @@
+"""Shared neural-net layers: norms, rotary embeddings, gated MLPs.
+
+Pure-functional: every layer is ``init(rng, cfg) -> params`` plus
+``apply(params, x, ...) -> y``. Parameters are plain dicts of jnp arrays so
+that layer stacks can be ``jax.lax.scan``-ed over a leading layer axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import constrain_weight
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(rng, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(rng, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def rmsnorm_head(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """qk-norm: normalize the last (head) dim with a shared scale vector."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for the head_dim//2 rotation planes."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jnp.ndarray,  # (..., seq, heads, head_dim)
+    positions: jnp.ndarray,  # (..., seq)
+    theta: float,
+) -> jnp.ndarray:
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_sections(head_dim: int) -> Tuple[int, int, int]:
+    """Split of the head_dim//2 frequency planes into (t, h, w) sections.
+
+    Matches Qwen2-VL's [16, 24, 24] for head_dim=128; scales proportionally
+    (ratio 2:3:3) for other head dims.
+    """
+    half = head_dim // 2
+    t = max(1, round(half * 2 / 8))
+    h = max(1, round(half * 3 / 8))
+    w = half - t - h
+    return t, h, w
+
+
+def apply_mrope(
+    x: jnp.ndarray,  # (batch, seq, heads, head_dim)
+    positions: jnp.ndarray,  # (batch, 3, seq): (temporal, height, width) ids
+    theta: float,
+) -> jnp.ndarray:
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    inv_freq = rope_frequencies(head_dim, theta)
+    sec_t, sec_h, sec_w = mrope_sections(head_dim)
+    # angles per modality axis: (batch, seq, half)
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (b, 3, s, half)
+    # pick the section owner (t/h/w) of each frequency index
+    idx = jnp.concatenate(
+        [
+            jnp.zeros((sec_t,), jnp.int32),
+            jnp.ones((sec_h,), jnp.int32),
+            jnp.full((sec_w,), 2, jnp.int32),
+        ]
+    )
+    onehot = jax.nn.one_hot(idx, 3, dtype=jnp.float32)  # (half, 3)
+    angles = jnp.einsum("bmsh,hm->bsh", ang, onehot)  # (b, s, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positions_from_tokens(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (batch, seq))
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(params: Params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    w_gate = constrain_weight(params["w_gate"], (None, "model"))
+    w_up = constrain_weight(params["w_up"], (None, "model"))
+    gate = jnp.einsum("...d,df->...f", x, w_gate)
+    up = jnp.einsum("...d,df->...f", x, w_up)
+    if act == "silu":
+        gate = jax.nn.silu(gate)
+    elif act == "gelu":
+        gate = jax.nn.gelu(gate, approximate=True)
+    else:
+        raise ValueError(f"unknown activation {act}")
+    w_down = constrain_weight(params["w_down"], ("model", None))
+    return jnp.einsum("...f,fd->...d", gate * up, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Softmax cross entropy (fp32, stable)
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(
+    logits: jnp.ndarray,  # (..., vocab)
+    labels: jnp.ndarray,  # (...)
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,326 @@
+"""Model zoo: ``build_model(cfg)`` -> a :class:`Model` with init/apply/loss/
+prefill/decode. Handles the modality frontends (audio frames, vision
+patches + M-RoPE) and the vocab head with seq-chunked cross-entropy so the
+full (seq, vocab) logit tensor is never materialized.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.api import constrain
+from repro.models import attention, moe, rwkv, ssm, transformer
+from repro.models.layers import (
+    mlp_apply,
+    Params,
+    embed_init,
+    positions_from_tokens,
+    rmsnorm,
+    rmsnorm_init,
+    softmax_cross_entropy,
+)
+
+
+@dataclass
+class ModelOptions:
+    kernel_mode: str = "reference"  # reference | chunked | pallas
+    remat: bool = True
+    scan_layers: bool = True
+    ssm_chunk: int = 128
+    wkv_chunk: int = 64
+    moe_group: int = 4096
+    attn_q_chunk: int = 4096
+    loss_chunk: int = 512
+    decode_cache_mode: str = "carry"  # carry | stream (see transformer.stack_decode)
+    kv_quantized: bool = False  # int8 KV cache (decode serving)
+    aux_coeff: float = 0.01
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, opts: Optional[ModelOptions] = None):
+        self.cfg = cfg
+        self.opts = opts or ModelOptions()
+
+    # ------------------------------------------------------------------
+    # Init
+    # ------------------------------------------------------------------
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(self.opts.param_dtype)
+        k_embed, k_layers, k_head = jax.random.split(rng, 3)
+        params: Params = {}
+        if cfg.frontend != "audio_frames":
+            params["embed"] = {"table": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype)}
+        layer_rngs = jax.random.split(k_layers, cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda r: transformer.layer_init(r, cfg, dtype)
+        )(layer_rngs)
+        params["final_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {"table": embed_init(k_head, cfg.vocab_size, cfg.d_model, dtype)}
+        return params
+
+    def abstract_params(self, rng=None) -> Params:
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init, rng)
+
+    # ------------------------------------------------------------------
+    # Embedding / head
+    # ------------------------------------------------------------------
+
+    def _compute_dtype(self):
+        return jnp.dtype(self.opts.compute_dtype)
+
+    def _embed(self, params: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        cfg = self.cfg
+        cdt = self._compute_dtype()
+        if cfg.frontend == "audio_frames":
+            x = batch["frame_embeds"].astype(cdt)
+        else:
+            table = params["embed"]["table"]
+            x = jnp.take(table, batch["tokens"], axis=0).astype(cdt)
+            if cfg.scale_embeddings:
+                x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+        if cfg.frontend == "vision_patches" and "patch_embeds" in batch:
+            n = batch["patch_embeds"].shape[1]
+            if x.shape[1] >= n:  # splice patch embeddings over the first n slots
+                x = jax.lax.dynamic_update_slice(
+                    x, batch["patch_embeds"].astype(cdt), (0, 0, 0)
+                )
+        return x
+
+    def _head_table(self, params: Params) -> jnp.ndarray:
+        if self.cfg.tie_embeddings:
+            return params["embed"]["table"]
+        return params["lm_head"]["table"]
+
+    def _positions(self, batch: Dict, b: int, s: int, offset=0) -> jnp.ndarray:
+        if self.cfg.rope_variant == "mrope":
+            return batch["positions"]
+        return positions_from_tokens(b, s, offset)
+
+    # ------------------------------------------------------------------
+    # Forward (train) + loss
+    # ------------------------------------------------------------------
+
+    def _trunk(self, params: Params, batch: Dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg, o = self.cfg, self.opts
+        cdt = self._compute_dtype()
+        cast = lambda t: t.astype(cdt) if t.dtype in (jnp.float32, jnp.bfloat16) else t
+        layers = jax.tree_util.tree_map(cast, params["layers"])
+        x = self._embed(params, batch)
+        x = constrain(x, ("data", None, None))
+        b, s = x.shape[0], x.shape[1]
+        positions = self._positions(batch, b, s)
+        x, aux = transformer.stack_apply(
+            layers, cfg, x, positions,
+            kernel_mode=o.kernel_mode, remat=o.remat, scan_layers=o.scan_layers,
+            ssm_chunk=o.ssm_chunk, wkv_chunk=o.wkv_chunk, moe_group=o.moe_group,
+            attn_q_chunk=o.attn_q_chunk,
+        )
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x, aux
+
+    def apply(self, params: Params, batch: Dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full logits (small models / tests only)."""
+        x, aux = self._trunk(params, batch)
+        table = self._head_table(params).astype(self._compute_dtype())
+        logits = jnp.einsum("bsd,vd->bsv", x, table)
+        return logits, aux
+
+    def loss(self, params: Params, batch: Dict) -> jnp.ndarray:
+        """Causal LM loss with seq-chunked head (never materializes the full
+        fp32 logit tensor)."""
+        x, aux = self._trunk(params, batch)
+        labels = batch["labels"]
+        table = self._head_table(params).astype(self._compute_dtype())
+        b, s, d = x.shape
+        chunk = min(self.opts.loss_chunk, s)
+        if s % chunk != 0:
+            chunk = s
+        n_chunks = s // chunk
+        xc = jnp.moveaxis(x.reshape(b, n_chunks, chunk, d), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(b, n_chunks, chunk), 1, 0)
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def chunk_nll(carry, inp):
+            xc_i, lc_i = inp
+            logits = jnp.einsum("bsd,vd->bsv", xc_i, table).astype(jnp.float32)
+            logz = jax.scipy.special.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lc_i[..., None], axis=-1)[..., 0]
+            return carry + jnp.sum(logz - gold), None
+
+        total, _ = jax.lax.scan(chunk_nll, jnp.zeros((), jnp.float32), (xc, lc))
+        nll = total / (b * s)
+        return nll + self.opts.aux_coeff * aux
+
+    # ------------------------------------------------------------------
+    # Serving: prefill + decode
+    # ------------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int, stacked: bool = True):
+        """Decode state. ``stacked`` -> leaves carry a leading n_layers axis
+        (scan decode); otherwise a tuple of per-layer dicts (unrolled decode
+        — each layer's buffer donates/aliases independently)."""
+        cfg = self.cfg
+        cdt = self._compute_dtype()
+        cache: Dict[str, Any] = {}
+        if cfg.family == "ssm":
+            cache.update(rwkv.rwkv_init_state(cfg, batch, cdt))
+        else:
+            cap = attention.cache_capacity(cfg, max_len)
+            cache.update(
+                attention.init_kv_cache(
+                    cfg, batch, cap, cdt, quantized=self.opts.kv_quantized
+                )
+            )
+            if cfg.family == "hybrid":
+                cache.update(ssm.ssm_init_state(cfg, batch, cdt))
+        if stacked:
+            return cache
+        return unstack_cache(cache, cfg.n_layers)
+
+    def prefill(
+        self, params: Params, batch: Dict, max_len: Optional[int] = None
+    ) -> Tuple[jnp.ndarray, Dict]:
+        """Run the full prompt once; return (last-token logits, filled cache).
+
+        One scan produces both the trunk output and the per-layer K/V /
+        recurrent states (the cache leaves come out of the scan's ys with a
+        leading n_layers axis, matching ``init_cache`` layout).
+
+        ``max_len`` sizes the emitted KV cache (room for decode steps);
+        defaults to the prompt length (no extra slots).
+        """
+        x, cache = self._prefill_trunk(params, batch, max_len=max_len)
+        x = rmsnorm(params["final_norm"], x, self.cfg.norm_eps)
+        table = self._head_table(params).astype(self._compute_dtype())
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], table)
+        return logits, cache
+
+    def _prefill_trunk(self, params: Params, batch: Dict, max_len: Optional[int] = None):
+        """Trunk pass that also captures per-layer K/V (and recurrent states)."""
+        cfg, o = self.cfg, self.opts
+        cdt = self._compute_dtype()
+        cast = lambda t: t.astype(cdt) if t.dtype in (jnp.float32, jnp.bfloat16) else t
+        layers = jax.tree_util.tree_map(cast, params["layers"])
+        x = self._embed(params, batch)
+        b, s = x.shape[0], x.shape[1]
+        positions = self._positions(batch, b, s)
+        cfg_cap = (
+            attention.cache_capacity(cfg, max_len if max_len is not None else s)
+            if cfg.family != "ssm"
+            else 0
+        )
+
+        def body(carry, layer_p):
+            xx = carry
+            caches = {}
+            if cfg.family == "ssm":
+                h = rmsnorm(layer_p["norm1"], xx, cfg.norm_eps)
+                out, (shift, s_final) = rwkv.tmix_apply(
+                    layer_p["tmix"], cfg, h,
+                    kernel_mode="chunked", chunk=o.wkv_chunk, return_state=True,
+                )
+                xx = xx + out
+                h = rmsnorm(layer_p["norm2"], xx, cfg.norm_eps)
+                out, cshift = rwkv.cmix_apply(
+                    layer_p["cmix"], cfg, h, return_state=True
+                )
+                xx = xx + out
+                caches = {"tmix_shift": shift, "cmix_shift": cshift, "wkv": s_final}
+                return xx, caches
+            h = rmsnorm(layer_p["attn_norm"], xx, cfg.norm_eps)
+            pa = layer_p["attn"]
+            q, k, v = attention._project_qkv(pa, cfg, h)
+            q, k = attention._apply_positions(cfg, q, k, positions)
+            # Capture the last `cap` tokens' K/V. Ring caches (SWA) align to
+            # ring order: slot of token p is p % cap (identity when
+            # s % cap == 0). Short prompts / linear caches pad at the end so
+            # decode steps have room.
+            if s >= cfg_cap:
+                k_cache, v_cache = k[:, -cfg_cap:], v[:, -cfg_cap:]
+                if cfg.sliding_window > 0 and s % cfg_cap != 0:
+                    k_cache = jnp.roll(k_cache, s % cfg_cap, axis=1)
+                    v_cache = jnp.roll(v_cache, s % cfg_cap, axis=1)
+            else:
+                pad = ((0, 0), (0, cfg_cap - s), (0, 0), (0, 0))
+                k_cache, v_cache = jnp.pad(k, pad), jnp.pad(v, pad)
+            if o.kv_quantized:  # serve pipeline stores int8 KV end-to-end
+                caches["k"], caches["k_scale"] = attention.quantize_kv(k_cache)
+                caches["v"], caches["v_scale"] = attention.quantize_kv(v_cache)
+            else:
+                caches["k"], caches["v"] = k_cache, v_cache
+            if cfg.sliding_window > 0:
+                attn_out = attention.sliding_window_attention(q, k, v, cfg.sliding_window)
+            elif s > o.attn_q_chunk:
+                attn_out = attention.causal_chunked_attention(q, k, v, o.attn_q_chunk)
+            else:
+                attn_out = attention.full_attention(q, k, v, causal=True)
+            attn_out = jnp.einsum(
+                "...e,ed->...d", attn_out.reshape(b, s, cfg.q_dim), pa["wo"]
+            )
+            if cfg.family == "hybrid":
+                ssm_out, (h_final, conv_state) = ssm.ssm_apply(
+                    layer_p["ssm"], cfg, h, chunk=o.ssm_chunk, return_state=True
+                )
+                caches["h"] = h_final
+                caches["conv"] = conv_state
+                attn_out = 0.5 * (attn_out + ssm_out)
+            xx = xx + attn_out
+            h = rmsnorm(layer_p["mlp_norm"], xx, cfg.norm_eps)
+            if cfg.is_moe:
+                mlp_out, _ = moe.moe_apply(
+                    layer_p["moe"], cfg, h, group_size=o.moe_group
+                )
+            else:
+                mlp_out = mlp_apply(layer_p["mlp"], h, cfg.gated_act)
+            return xx + mlp_out, caches
+
+        x, cache = jax.lax.scan(body, x, layers)
+        return x, cache
+
+    def decode(
+        self, params: Params, batch: Dict, cache: Dict, pos: jnp.ndarray
+    ) -> Tuple[jnp.ndarray, Dict]:
+        """One token for every sequence in the batch. pos: scalar count of
+        tokens already in the cache."""
+        cfg, o = self.cfg, self.opts
+        cdt = self._compute_dtype()
+        cast = lambda t: t.astype(cdt) if t.dtype in (jnp.float32, jnp.bfloat16) else t
+        layers = jax.tree_util.tree_map(cast, params["layers"])
+        x = self._embed(params, batch)
+        b = x.shape[0]
+        if cfg.rope_variant == "mrope":
+            positions = batch["positions"]
+        else:
+            positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+        # per-layer (tuple) caches imply the unrolled path; stacked -> scan
+        scan_layers = not isinstance(cache, (list, tuple))
+        x, new_cache = transformer.stack_decode(
+            layers, cfg, x, positions, cache, pos, scan_layers=scan_layers,
+            cache_mode=o.decode_cache_mode,
+        )
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        table = self._head_table(params).astype(cdt)
+        logits = jnp.einsum("bsd,vd->bsv", x, table)
+        return logits, new_cache
+
+
+def unstack_cache(cache: Dict, n_layers: int) -> Tuple:
+    """(L, ...)-stacked cache -> tuple of per-layer dicts (views)."""
+    return tuple(
+        jax.tree_util.tree_map(lambda t, i=i: t[i], cache) for i in range(n_layers)
+    )
+
+
+def build_model(cfg: ArchConfig, opts: Optional[ModelOptions] = None) -> Model:
+    return Model(cfg, opts)

@@ -1,0 +1,202 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing with capacity-bounded
+sort-based dispatch (TPU-native: sort/gather/scatter instead of one-hot
+matmul dispatch, so HLO FLOPs stay honest — only expert matmuls count).
+
+Layout follows the GShard/MaxText *grouped* formulation: tokens are split
+into groups (sharded over the data axis); routing, sorting and capacity are
+per-group, so no global sort crosses shard boundaries. Expert compute is an
+einsum over (groups, experts, capacity, d) activations against (experts, d,
+f) weights; expert-parallel vs. tensor-parallel placement is chosen by the
+sharding rules (see dist/sharding.py) via logical-axis constraints.
+
+``moe_reference`` is the dense oracle (every expert computed, gated sum)
+used by unit/property tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.api import constrain
+from repro.models.layers import Params, dense_init
+
+
+def moe_init(rng, cfg: ArchConfig, dtype) -> Params:
+    kr, kg, ku, kd = jax.random.split(rng, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": dense_init(kr, d, e, jnp.float32),  # router kept fp32
+        "w_gate": jnp.stack([dense_init(k, d, f, dtype) for k in jax.random.split(kg, e)]),
+        "w_up": jnp.stack([dense_init(k, d, f, dtype) for k in jax.random.split(ku, e)]),
+        "w_down": jnp.stack([dense_init(k, f, d, dtype) for k in jax.random.split(kd, e)]),
+    }
+
+
+def default_capacity(group_size: int, top_k: int, n_experts: int, factor: float = 1.25) -> int:
+    cap = int(group_size * top_k / n_experts * factor)
+    cap = max(cap, top_k)  # never below top_k so tiny groups still route
+    # round up to an MXU-friendly multiple
+    return -(-cap // 8) * 8
+
+
+# ---------------------------------------------------------------------------
+# Routing (shared by dispatch + oracle)
+# ---------------------------------------------------------------------------
+
+
+def route(router_w: jnp.ndarray, x: jnp.ndarray, top_k: int):
+    """x: (..., d) -> (gate_vals (..., k) fp32, expert_idx (..., k) int32,
+    router probs for aux loss)."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    return gate_vals, expert_idx, probs
+
+
+def load_balance_loss(probs: jnp.ndarray, expert_idx: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e."""
+    assign = jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.float32)  # (..., k, E)
+    f = jnp.mean(jnp.sum(assign, axis=-2).reshape(-1, n_experts), axis=0)
+    p = jnp.mean(probs.reshape(-1, n_experts), axis=0)
+    return n_experts * jnp.sum(f * p)
+
+
+# ---------------------------------------------------------------------------
+# Sort-based capacity dispatch (per group)
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_indices(expert_idx: jnp.ndarray, n_experts: int, capacity: int):
+    """Per-group routing tables.
+
+    expert_idx: (S, k) int32. Returns:
+      slot_table: (E, C) int32 — flat (s*k+j) id occupying each expert slot,
+                  sentinel S*k when empty;
+      slot_of_flat: (S*k,) int32 — flat slot id (e*C + c) per assignment,
+                  sentinel E*C when dropped (capacity overflow).
+    """
+    s, k = expert_idx.shape
+    n_flat = s * k
+    flat_expert = expert_idx.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)  # token-order preserved per expert
+    sorted_expert = flat_expert[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat_expert].add(1)
+    offsets = jnp.cumsum(counts) - counts
+    pos_in_expert = jnp.arange(n_flat, dtype=jnp.int32) - offsets[sorted_expert]
+    keep = pos_in_expert < capacity
+    slot_table = jnp.full((n_experts, capacity), n_flat, jnp.int32)
+    slot_table = slot_table.at[
+        sorted_expert, jnp.where(keep, pos_in_expert, capacity)
+    ].set(order, mode="drop")
+    flat_slot = jnp.where(
+        keep, sorted_expert * capacity + pos_in_expert, n_experts * capacity
+    )
+    slot_of_flat = jnp.zeros((n_flat,), jnp.int32).at[order].set(flat_slot)
+    return slot_table, slot_of_flat
+
+
+def _expert_ffn(p: Params, h: jnp.ndarray, act: str) -> jnp.ndarray:
+    """h: (g, e, c, d) -> (g, e, c, d), batched per expert."""
+    gate = jnp.einsum("gecd,edf->gecf", h, p["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", h, p["w_up"])
+    gate = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate, approximate=True)
+    return jnp.einsum("gecf,efd->gecd", gate * up, p["w_down"])
+
+
+def _moe_groups(
+    p: Params, cfg: ArchConfig, xg: jnp.ndarray, cap: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch + expert FFN + combine for a block of groups.
+    xg: (g, g_size, d) -> (output (g, g_size, d), aux)."""
+    n_groups, g_size, d = xg.shape
+    gate_vals, expert_idx, probs = route(p["router"], xg, cfg.top_k)
+    aux = load_balance_loss(probs, expert_idx, cfg.n_experts)
+
+    slot_table, slot_of_flat = jax.vmap(
+        lambda ei: _dispatch_indices(ei, cfg.n_experts, cap)
+    )(expert_idx)
+
+    # Gather expert inputs: sentinel row -> zeros.
+    x_pad = jnp.concatenate([xg, jnp.zeros((n_groups, 1, d), xg.dtype)], axis=1)
+    tok_idx = jnp.where(slot_table < g_size * cfg.top_k, slot_table // cfg.top_k, g_size)
+    expert_in = jax.vmap(lambda xp, ti: xp[ti])(x_pad, tok_idx)  # (g, e, c, d)
+    expert_in = constrain(expert_in, ("data", "expert", None, None))
+
+    expert_out = _expert_ffn(p, expert_in, cfg.gated_act)
+    expert_out = constrain(expert_out, ("data", "expert", None, None))
+
+    # Combine: gather each assignment's slot output, weight by gates.
+    out_flat = expert_out.reshape(n_groups, cfg.n_experts * cap, d)
+    out_pad = jnp.concatenate(
+        [out_flat, jnp.zeros((n_groups, 1, d), out_flat.dtype)], axis=1
+    )
+    contrib = jax.vmap(lambda op, sof: op[sof])(out_pad, slot_of_flat)
+    contrib = contrib.reshape(n_groups, g_size, cfg.top_k, d)
+    y = jnp.sum(contrib * gate_vals[..., None].astype(contrib.dtype), axis=2)
+    return y, aux
+
+
+def moe_apply(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # (b, s, d)
+    *,
+    group_size: int = 4096,
+    capacity_factor: float = 1.25,
+    max_groups_per_block: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (b,s,d), aux load-balance loss scalar).
+
+    Groups beyond ``max_groups_per_block`` are processed by a lax.scan over
+    group blocks, bounding the live dispatch tensors — 32k-token prefills
+    would otherwise materialize (all_groups, E, C, d) gathers at once.
+    """
+    b, s, d = x.shape
+    tokens = b * s
+    g_size = min(group_size, tokens)
+    while tokens % g_size:  # largest divisor of the token count <= group_size
+        g_size -= 1
+    n_groups = tokens // g_size
+    xg = x.reshape(n_groups, g_size, d)
+    cap = default_capacity(g_size, cfg.top_k, cfg.n_experts, capacity_factor)
+
+    if n_groups <= max_groups_per_block or n_groups % max_groups_per_block:
+        y, aux = _moe_groups(p, cfg, xg, cap)
+        return y.reshape(b, s, d), aux
+
+    n_blocks = n_groups // max_groups_per_block
+    xb = xg.reshape(n_blocks, max_groups_per_block, g_size, d)
+
+    def body(_, xblk):
+        y, aux = _moe_groups(p, cfg, xblk, cap)
+        return None, (y, aux)
+
+    _, (yb, auxb) = jax.lax.scan(body, None, xb)
+    return yb.reshape(b, s, d), jnp.mean(auxb)
+
+
+# ---------------------------------------------------------------------------
+# Dense oracle (tests): every expert computed, gated combination
+# ---------------------------------------------------------------------------
+
+
+def moe_reference(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, d = x.shape
+    gate_vals, expert_idx, probs = route(p["router"], x, cfg.top_k)
+    aux = load_balance_loss(probs, expert_idx, cfg.n_experts)
+    act = cfg.gated_act
+    outs = []
+    for e in range(cfg.n_experts):
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"][e])
+        up = jnp.einsum("bsd,df->bsf", x, p["w_up"][e])
+        gate = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate, approximate=True)
+        outs.append(jnp.einsum("bsf,fd->bsd", gate * up, p["w_down"][e]))
+    stacked = jnp.stack(outs, axis=2)  # (b, s, E, d)
+    onehot = jax.nn.one_hot(expert_idx, cfg.n_experts, dtype=jnp.float32)
+    w_full = jnp.sum(onehot * gate_vals[..., None], axis=-2)  # (b, s, E)
+    y = jnp.einsum("bse,bsed->bsd", w_full.astype(stacked.dtype), stacked)
+    return y, aux

@@ -1,0 +1,288 @@
+"""RWKV-6 (Finch): token-shift time-mix with data-dependent decay + channel-mix.
+
+WKV recurrence per head (state S: (dk, dv)):
+    o_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with per-token per-channel decay w_t in (0,1) produced by a LoRA on the
+shifted input (the paper's data-dependent decay).
+
+Paths:
+  * ``wkv_ref``      — lax.scan oracle (+ decode single step),
+  * ``wkv_chunked``  — chunk-sequential, intra-chunk parallel (the form the
+                        Pallas kernel implements; pure-jnp here),
+  * Pallas kernel    — repro.kernels.rwkv_scan (selected via kernel_mode).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.api import constrain
+from repro.models.layers import Params, dense_init
+
+LORA_DIM_DECAY = 64
+LORA_DIM_MIX = 32
+N_MIX = 5  # r, k, v, w, g
+
+
+def rwkv_dims(cfg: ArchConfig) -> Tuple[int, int]:
+    hd = cfg.rwkv_head_dim
+    return cfg.d_model // hd, hd  # (heads, head_dim)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def tmix_init(rng, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    h, hd = rwkv_dims(cfg)
+    keys = jax.random.split(rng, 10)
+    return {
+        "mu_x": jnp.full((d,), 0.5, jnp.float32),
+        "mu": jnp.full((N_MIX, d), 0.5, jnp.float32),  # r,k,v,w,g bases
+        "mix_w1": dense_init(keys[0], d, N_MIX * LORA_DIM_MIX, jnp.float32),
+        "mix_w2": (
+            jax.random.normal(keys[1], (N_MIX, LORA_DIM_MIX, d), jnp.float32) * 0.02
+        ),
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),
+        "decay_w1": dense_init(keys[2], d, LORA_DIM_DECAY, jnp.float32),
+        "decay_w2": dense_init(keys[3], LORA_DIM_DECAY, d, jnp.float32),
+        "bonus": (jax.random.normal(keys[4], (h, hd), jnp.float32) * 0.02),
+        "wr": dense_init(keys[5], d, d, dtype),
+        "wk": dense_init(keys[6], d, d, dtype),
+        "wv": dense_init(keys[7], d, d, dtype),
+        "wg": dense_init(keys[8], d, d, dtype),
+        "wo": dense_init(keys[9], d, d, dtype),
+        "ln_x": jnp.ones((d,), jnp.float32),
+    }
+
+
+def cmix_init(rng, cfg: ArchConfig, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "wk": dense_init(k1, d, f, dtype),
+        "wv": dense_init(k2, f, d, dtype),
+        "wr": dense_init(k3, d, d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV core
+# ---------------------------------------------------------------------------
+
+
+def wkv_ref(
+    r: jnp.ndarray,  # (b, s, h, dk) fp32
+    k: jnp.ndarray,  # (b, s, h, dk)
+    v: jnp.ndarray,  # (b, s, h, dv)
+    w: jnp.ndarray,  # (b, s, h, dk) decay in (0,1), fp32
+    u: jnp.ndarray,  # (h, dk) bonus
+    s0: jnp.ndarray | None = None,  # (b, h, dk, dv)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp  # (b, h, d*)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (b, h, dk, dv)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[..., :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_final, os = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(os, 0, 1), s_final  # (b, s, h, dv), (b, h, dk, dv)
+
+
+def wkv_chunked(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    *,
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunk-sequential WKV. Within each chunk of length L:
+        o_t = (r_t * prod_{s<=t-1} w) @ S_0
+            + sum_{s<t} [sum_c r_t[c] k_s[c] e^{cum[t-1,c]-cum[s,c]}] v_s
+            + (r_t . (u*k_t)) v_t
+    computed with an explicit (L, L, dk) decay tensor per (b, h) — the exact
+    math the Pallas kernel tiles in VMEM.
+    """
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    if s % chunk != 0:
+        return wkv_ref(r, k, v, w, u)
+    n_chunks = s // chunk
+    L = chunk
+
+    def rearr(t):
+        return jnp.moveaxis(t.reshape(b, n_chunks, L, h, t.shape[-1]), 1, 0)
+
+    r_c, k_c, v_c, w_c = rearr(r), rearr(k), rearr(v), rearr(w)
+
+    def chunk_step(state, inp):  # state: (b, h, dk, dv)
+        r_t, k_t, v_t, w_t = inp  # (b, L, h, d)
+        logw = jnp.log(w_t)  # negative
+        cum = jnp.cumsum(logw, axis=1)  # (b, L, h, dk): cum[t] = sum_{s<=t} log w_s
+        cum_prev = cum - logw  # cum[t-1] with cum[-1] = 0
+        # inter-chunk: r decayed to chunk start
+        r_dec = r_t * jnp.exp(cum_prev)
+        o_inter = jnp.einsum("blhk,bhkv->blhv", r_dec, state)
+        # intra-chunk: pairwise scores with per-channel decay
+        decay_ts = jnp.exp(
+            cum_prev[:, :, None] - cum[:, None, :]
+        )  # (b, t, s, h, dk) = e^{cum[t-1]-cum[s]}
+        mask = (jnp.arange(L)[:, None] > jnp.arange(L)[None, :])[None, :, :, None]
+        scores = jnp.einsum(
+            "blhk,bmhk,blmhk->blmh",
+            r_t,
+            k_t,
+            jnp.where(mask[..., None], decay_ts, 0.0),
+        )
+        o_intra = jnp.einsum("blmh,bmhv->blhv", scores, v_t)
+        # diagonal bonus term
+        diag = jnp.einsum("blhk,hk,blhk->blh", r_t, u, k_t)
+        o_diag = diag[..., None] * v_t
+        o = o_inter + o_intra + o_diag
+        # state update to end of chunk
+        decay_to_end = jnp.exp(cum[:, -1:, :, :] - cum)  # (b, L, h, dk)
+        k_dec = k_t * decay_to_end
+        state = jnp.exp(cum[:, -1])[..., :, None] * state + jnp.einsum(
+            "blhk,blhv->bhkv", k_dec, v_t
+        )
+        return state, o
+
+    s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    s_final, os = jax.lax.scan(chunk_step, s0, (r_c, k_c, v_c, w_c))
+    o = jnp.moveaxis(os, 0, 1).reshape(b, s, h, dv)
+    return o, s_final
+
+
+# ---------------------------------------------------------------------------
+# Time-mix / channel-mix blocks
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x: jnp.ndarray, prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """x_{t-1}; first position uses `prev` (decode carry) or zeros."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: Params, x: jnp.ndarray, x_prev: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    """Data-dependent token-shift interpolation producing the 5 mixed streams."""
+    xx = (x_prev - x).astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    base = x32 + xx * p["mu_x"]
+    lora = jnp.tanh(jnp.einsum("bsd,dm->bsm", base, p["mix_w1"]))
+    lora = lora.reshape(*lora.shape[:-1], N_MIX, LORA_DIM_MIX)
+    delta = jnp.einsum("bsnm,nmd->bsnd", lora, p["mix_w2"])  # (b,s,5,d)
+    mixed = x32[:, :, None] + xx[:, :, None] * (p["mu"] + delta)
+    return tuple(mixed[:, :, i] for i in range(N_MIX))  # r,k,v,w,g streams
+
+
+def _group_norm(x: jnp.ndarray, scale: jnp.ndarray, h: int, eps: float = 64e-5) -> jnp.ndarray:
+    """Per-head layer norm of the wkv output (rwkv's ln_x)."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, h, d // h).astype(jnp.float32)
+    mean = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b, s, d) * scale).astype(x.dtype)
+
+
+def tmix_apply(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    *,
+    kernel_mode: str = "reference",
+    chunk: int = 64,
+    shift_prev: jnp.ndarray | None = None,
+    s0: jnp.ndarray | None = None,
+    return_state: bool = False,
+):
+    h, hd = rwkv_dims(cfg)
+    b, s, d = x.shape
+    x_prev = _token_shift(x, shift_prev)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    dt = x.dtype
+    r = jnp.einsum("bsd,de->bse", xr.astype(dt), p["wr"])
+    k = jnp.einsum("bsd,de->bse", xk.astype(dt), p["wk"])
+    v = jnp.einsum("bsd,de->bse", xv.astype(dt), p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg.astype(dt), p["wg"]))
+    # data-dependent decay (fp32)
+    decay_lora = jnp.einsum(
+        "bsd,de->bse", jnp.tanh(jnp.einsum("bsd,dm->bsm", xw, p["decay_w1"])), p["decay_w2"]
+    )
+    w = jnp.exp(-jnp.exp(p["decay_base"] + decay_lora))  # (b, s, d) in (0,1)
+
+    def heads(t):
+        return t.reshape(b, s, h, hd)
+
+    r4, k4, v4, w4 = (
+        heads(r).astype(jnp.float32),
+        heads(k).astype(jnp.float32),
+        heads(v).astype(jnp.float32),
+        heads(w.astype(jnp.float32)),
+    )
+    r4 = constrain(r4, ("data", None, "model", None))
+    if s == 1:
+        o, s_final = wkv_ref(r4, k4, v4, w4, p["bonus"], s0)
+    elif kernel_mode == "pallas":
+        from repro.kernels.rwkv_scan import ops as wkv_ops
+
+        o, s_final = wkv_ops.wkv6(r4, k4, v4, w4, p["bonus"], chunk=chunk)
+    elif kernel_mode == "chunked":
+        o, s_final = wkv_chunked(r4, k4, v4, w4, p["bonus"], chunk=chunk)
+    else:
+        o, s_final = wkv_ref(r4, k4, v4, w4, p["bonus"], s0)
+    o = o.reshape(b, s, d).astype(x.dtype)
+    o = _group_norm(o, p["ln_x"], h)
+    out = jnp.einsum("bsd,de->bse", o * g, p["wo"])
+    if return_state:
+        return out, (x[:, -1:], s_final)
+    return out
+
+
+def cmix_apply(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    *,
+    shift_prev: jnp.ndarray | None = None,
+    return_state: bool = False,
+):
+    x_prev = _token_shift(x, shift_prev)
+    xx = (x_prev - x).astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    xk = (x32 + xx * p["mu_k"]).astype(x.dtype)
+    xr = (x32 + xx * p["mu_r"]).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"])) * kv
+    if return_state:
+        return out, x[:, -1:]
+    return out
+
+
+def rwkv_init_state(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    h, hd = rwkv_dims(cfg)
+    return {
+        "tmix_shift": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dtype),
+        "cmix_shift": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dtype),
+        "wkv": jnp.zeros((cfg.n_layers, batch, h, hd, hd), jnp.float32),
+    }

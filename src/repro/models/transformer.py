@@ -1,0 +1,251 @@
+"""Block composition + scan-over-layers for every architecture family.
+
+One uniform contract so a single scan drives all 10 archs:
+  * layer params: pytree whose leaves have a leading ``n_layers`` axis,
+  * full-seq path: ``stack_apply`` (train / prefill),
+  * decode path:  ``stack_decode`` (scan carries x; cache slices are scanned
+    xs/ys so each layer reads & writes its own cache slice).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.api import constrain
+from repro.models import attention, moe, rwkv, ssm
+from repro.models.layers import Params, mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init (vmapped over layers by the model)
+# ---------------------------------------------------------------------------
+
+
+def layer_init(rng, cfg: ArchConfig, dtype) -> Params:
+    keys = jax.random.split(rng, 6)
+    p: Params = {}
+    if cfg.family == "ssm":  # rwkv
+        p["norm1"] = rmsnorm_init(cfg.d_model, dtype)
+        p["tmix"] = rwkv.tmix_init(keys[0], cfg, dtype)
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["cmix"] = rwkv.cmix_init(keys[1], cfg, dtype)
+        return p
+    p["attn_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    p["attn"] = attention.attention_init(keys[0], cfg, dtype)
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm.ssm_init(keys[1], cfg, dtype)
+    p["mlp_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    if cfg.is_moe:
+        p["moe"] = moe.moe_init(keys[2], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(keys[2], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence block (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def block_apply(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    kernel_mode: str = "reference",
+    ssm_chunk: int = 128,
+    wkv_chunk: int = 64,
+    moe_group: int = 4096,
+    attn_q_chunk: int = 4096,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x_out, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        wkv_mode = kernel_mode if kernel_mode != "reference" else "chunked"
+        x = x + rwkv.tmix_apply(
+            p["tmix"], cfg, rmsnorm(p["norm1"], x, cfg.norm_eps),
+            kernel_mode=wkv_mode, chunk=wkv_chunk,
+        )
+        x = x + rwkv.cmix_apply(p["cmix"], cfg, rmsnorm(p["norm2"], x, cfg.norm_eps))
+        return x, aux
+
+    h = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    attn_out = attention.attention_apply(
+        p["attn"], cfg, h, positions, kernel_mode=kernel_mode, q_chunk=attn_q_chunk
+    )
+    if cfg.family == "hybrid":
+        ssm_out = ssm.ssm_apply(p["ssm"], cfg, h, chunk=ssm_chunk)
+        attn_out = 0.5 * (attn_out + ssm_out)  # hymba parallel-head fusion
+    x = x + attn_out
+    x = constrain(x, ("data", None, None))
+
+    h = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        mlp_out, aux = moe.moe_apply(p["moe"], cfg, h, group_size=moe_group)
+    else:
+        mlp_out = mlp_apply(p["mlp"], h, cfg.gated_act)
+    x = x + mlp_out
+    x = constrain(x, ("data", None, None))
+    return x, aux
+
+
+def stack_apply(
+    layers: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    kernel_mode: str = "reference",
+    remat: bool = True,
+    scan_layers: bool = True,
+    ssm_chunk: int = 128,
+    wkv_chunk: int = 64,
+    moe_group: int = 4096,
+    attn_q_chunk: int = 4096,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run all layers. Returns (x, mean aux loss)."""
+    kw = dict(
+        kernel_mode=kernel_mode,
+        ssm_chunk=ssm_chunk,
+        wkv_chunk=wkv_chunk,
+        moe_group=moe_group,
+        attn_q_chunk=attn_q_chunk,
+    )
+
+    def body(carry, layer_p):
+        y, aux = block_apply(layer_p, cfg, carry, positions, **kw)
+        return y, aux
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False
+        )
+
+    if scan_layers:
+        x, auxs = jax.lax.scan(body, x, layers)
+        return x, jnp.mean(auxs)
+    auxs = []
+    for i in range(cfg.n_layers):
+        layer_p = jax.tree_util.tree_map(lambda t: t[i], layers)
+        x, aux = body(x, layer_p)
+        auxs.append(aux)
+    return x, jnp.mean(jnp.stack(auxs))
+
+
+# ---------------------------------------------------------------------------
+# Decode block (one token, stateful)
+# ---------------------------------------------------------------------------
+
+
+def block_decode(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # (b, 1, d)
+    positions: jnp.ndarray,
+    cache: Dict,  # this layer's cache slice
+    pos: jnp.ndarray,  # scalar: tokens already cached
+) -> Tuple[jnp.ndarray, Dict]:
+    new_cache: Dict = {}
+    if cfg.family == "ssm":
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        out, (shift, s_final) = rwkv.tmix_apply(
+            p["tmix"], cfg, h, shift_prev=cache["tmix_shift"],
+            s0=cache["wkv"], return_state=True,
+        )
+        x = x + out
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        out, cshift = rwkv.cmix_apply(
+            p["cmix"], cfg, h, shift_prev=cache["cmix_shift"], return_state=True
+        )
+        x = x + out
+        new_cache = {"tmix_shift": shift, "cmix_shift": cshift, "wkv": s_final}
+        return x, new_cache
+
+    h = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    kv_keys = [k for k in ("k", "v", "k_scale", "v_scale") if k in cache]
+    attn_out, kv_cache = attention.attention_decode(
+        p["attn"], cfg, h, positions, {k: cache[k] for k in kv_keys}, pos
+    )
+    new_cache.update(kv_cache)
+    if cfg.family == "hybrid":
+        ssm_out, ssm_state = ssm.ssm_decode(
+            p["ssm"], cfg, h, {"conv": cache["conv"], "h": cache["h"]}
+        )
+        attn_out = 0.5 * (attn_out + ssm_out)
+        new_cache.update(ssm_state)
+    x = x + attn_out
+
+    h = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        mlp_out, _ = moe.moe_apply(
+            p["moe"], cfg, h, group_size=h.shape[0], capacity_factor=2.0
+        )
+    else:
+        mlp_out = mlp_apply(p["mlp"], h, cfg.gated_act)
+    return x + mlp_out, new_cache
+
+
+def stack_decode(
+    layers: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache: Dict,  # leaves have leading n_layers axis
+    pos: jnp.ndarray,
+    *,
+    scan_layers: bool = True,
+    cache_mode: str = "carry",  # carry | stream
+) -> Tuple[jnp.ndarray, Dict]:
+    if scan_layers and cache_mode == "stream":
+        if isinstance(cache, (list, tuple)):
+            raise TypeError("scan decode expects a stacked cache")
+        # xs/ys streaming: the old cache enters as read-only xs (aliases
+        # the donated input) and the new cache leaves as ys (aliases the
+        # output) — no same-iteration read/write of one buffer.
+        def body(carry, xs):
+            layer_p, layer_cache = xs
+            y, new_cache = block_decode(layer_p, cfg, carry, positions, layer_cache, pos)
+            return y, new_cache
+
+        x, new_cache = jax.lax.scan(body, x, (layers, cache))
+        return x, new_cache
+    if scan_layers:
+        if isinstance(cache, (list, tuple)):
+            raise TypeError("scan decode expects a stacked cache")
+        # The cache rides in the scan CARRY and each layer updates its own
+        # slice with a dynamic-update-slice: XLA aliases carry buffers in
+        # place, and the body compiles once regardless of depth.
+        def body(carry, layer_p):
+            xx, c, i = carry
+            layer_cache = jax.tree_util.tree_map(
+                lambda t: jax.lax.dynamic_index_in_dim(t, i, 0, keepdims=False), c
+            )
+            xx, nc = block_decode(layer_p, cfg, xx, positions, layer_cache, pos)
+            c = jax.tree_util.tree_map(
+                lambda full, upd: jax.lax.dynamic_update_slice(
+                    full,
+                    upd[None].astype(full.dtype),
+                    (i,) + (0,) * (full.ndim - 1),
+                ),
+                c,
+                nc,
+            )
+            return (xx, c, i + 1), None
+
+        (x, new_cache, _), _ = jax.lax.scan(
+            body, (x, cache, jnp.zeros((), jnp.int32)), layers
+        )
+        return x, new_cache
+    # Unrolled alternative: per-layer cache tuple, each leaf donating 1:1.
+    assert isinstance(cache, (list, tuple)), "unrolled decode expects per-layer cache"
+    new_cache = []
+    for i in range(cfg.n_layers):
+        layer_p = jax.tree_util.tree_map(lambda t: t[i], layers)
+        x, nc = block_decode(layer_p, cfg, x, positions, cache[i], pos)
+        new_cache.append(nc)
+    return x, tuple(new_cache)

@@ -1,0 +1,96 @@
+"""Error-feedback int8 gradient compression for the cross-pod DP reduction.
+
+At 2+ pods the 'pod' axis rides the slow inter-pod links (DCN), so the
+cross-pod gradient all-reduce is the step's collective bottleneck. Classic
+fix: quantize the update to int8 with error feedback (EF-SGD / 1-bit Adam
+lineage) — the quantization residual is carried into the next step, so the
+*accumulated* update is unbiased and convergence matches fp32 to first
+order.
+
+``compress -> (decompress later)`` round-trips through (int8 values, fp32
+per-block scales). Block size 256 bounds the quantization range loss. The
+returned apply() hook plugs into TrainRunConfig.grad_transform; in a real
+multi-pod deployment the int8 payload is what crosses the DCN (shard_map
+psum of the dequantized tensor after an int8 all-gather); the dry-run
+measures the 4x byte reduction on the wire (§Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def _quantize_block(x: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize_block(q: jnp.ndarray, scale: jnp.ndarray, shape, block: int) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress(x: jnp.ndarray, block: int = 256) -> Dict[str, jnp.ndarray]:
+    q, scale = _quantize_block(x.astype(jnp.float32), block)
+    return {"q": q, "scale": scale}
+
+
+def decompress(payload: Dict[str, jnp.ndarray], shape, block: int = 256) -> jnp.ndarray:
+    return _dequantize_block(payload["q"], payload["scale"], shape, block)
+
+
+class ErrorFeedbackCompressor:
+    """Stateful EF compressor over a grad pytree.
+
+    state = residual pytree (fp32). apply(grads, state) ->
+    (decompressed grads as seen post-reduction, new state).
+    """
+
+    def __init__(self, block: int = 256):
+        self.block = block
+
+    def init(self, grads: Pytree) -> Pytree:
+        return jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads
+        )
+
+    def apply(self, grads: Pytree, residual: Pytree) -> Tuple[Pytree, Pytree]:
+        def one(g, r):
+            corrected = g.astype(jnp.float32) + r
+            payload = compress(corrected, self.block)
+            deq = decompress(payload, g.shape, self.block)
+            new_r = corrected - deq
+            return deq.astype(g.dtype), new_r
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_r = treedef.flatten_up_to(residual)
+        outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        deqs = treedef.unflatten([o[0] for o in outs])
+        resids = treedef.unflatten([o[1] for o in outs])
+        return deqs, resids
+
+
+def wire_bytes(grads: Pytree, compressed: bool, block: int = 256) -> int:
+    """Bytes crossing the slow link per reduction (for the §Perf table)."""
+    total = 0
+    for g in jax.tree_util.tree_leaves(grads):
+        n = g.size
+        if compressed:
+            n_blocks = -(-n // block)
+            total += n + 4 * n_blocks  # int8 payload + fp32 scales
+        else:
+            total += 4 * n
+    return total

@@ -1,0 +1,76 @@
+"""Per-(arch x shape) runtime knobs: microbatching, dtypes, chunk sizes.
+
+Defaults are sized for the production mesh (256 x v5e-16GB per pod) from
+napkin math over saved-activation bytes (n_layers x mb x seq x d_model x 2B
+per device must stay under ~3-5 GB with remat) and param+optimizer HBM
+(fp32 params + fp32 m/v = 12 B/param for <100B archs; bf16 params + fp32
+m/v = 10 B/param for the 100B+ archs). See EXPERIMENTS.md §Dry-run for the
+measured per-device numbers that validate these choices.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.model import ModelOptions
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainRunConfig
+
+# arch -> (train microbatches, param_dtype, accum_dtype)
+_TRAIN_TABLE = {
+    "hymba-1.5b": (4, "float32", "float32"),
+    "qwen3-moe-235b-a22b": (16, "bfloat16", "bfloat16"),
+    "mixtral-8x22b": (16, "bfloat16", "bfloat16"),
+    "musicgen-medium": (4, "float32", "float32"),
+    "qwen1.5-32b": (8, "float32", "float32"),
+    "qwen3-8b": (8, "float32", "float32"),
+    "gemma-2b": (4, "float32", "float32"),
+    "qwen2-72b": (16, "bfloat16", "bfloat16"),
+    "rwkv6-7b": (8, "float32", "float32"),
+    "qwen2-vl-72b": (16, "bfloat16", "bfloat16"),
+}
+
+
+def model_options_for(arch: ArchConfig, shape: ShapeConfig, kernel_mode: str = "reference") -> ModelOptions:
+    base = arch.name.replace("-smoke", "")
+    mb, param_dtype, _ = _TRAIN_TABLE.get(base, (1, "float32", "float32"))
+    if shape.kind != "train":
+        param_dtype = "bfloat16"  # serving holds bf16 weights only
+    return ModelOptions(
+        kernel_mode=kernel_mode,
+        remat=shape.kind == "train",
+        scan_layers=True,
+        ssm_chunk=128,
+        wkv_chunk=64,
+        moe_group=4096,
+        attn_q_chunk=1024 if shape.kind == "prefill" else 4096,
+        loss_chunk=512,
+        # serving stores the KV cache as int8 (+fp16 scales) end-to-end
+        # (prefill emits it, decode consumes/extends it): the MHA archs
+        # (kv=40 @ 32k x 128) cannot fit 16 GB/chip in bf16, and it halves
+        # the dominant decode HBM stream for the rest (~1% logit error).
+        kv_quantized=shape.kind in ("decode", "prefill"),
+        compute_dtype="bfloat16",
+        param_dtype=param_dtype,
+    )
+
+
+def train_run_config_for(arch: ArchConfig, shape: ShapeConfig) -> TrainRunConfig:
+    base = arch.name.replace("-smoke", "")
+    mb, _, accum = _TRAIN_TABLE.get(base, (1, "float32", "float32"))
+    mb = min(mb, shape.global_batch)
+    return TrainRunConfig(num_microbatches=mb, accum_dtype=accum)
+
+
+def adamw_config_for(arch: ArchConfig) -> AdamWConfig:
+    base = arch.name.replace("-smoke", "")
+    _, param_dtype, _ = _TRAIN_TABLE.get(base, (1, "float32", "float32"))
+    # >=100B archs hold Adam moments in bf16 (2+2+2 B/param with bf16
+    # params): the 235B MoE doesn't fit fp32 moments in 256 x 16 GB.
+    # bf16 has fp32's exponent range; the precision loss on m/v is the
+    # well-trodden 16-bit-optimizer tradeoff.
+    state_dtype = "bfloat16" if param_dtype == "bfloat16" else "float32"
+    return AdamWConfig(
+        lr=3e-4, warmup_steps=200, total_steps=50_000, state_dtype=state_dtype
+    )

@@ -1,0 +1,58 @@
+"""Serve-step factories: prefill and decode, plus a token sampler.
+
+``decode`` matches the assignment's decode cells: one new token per
+sequence against a KV cache (or recurrent state) of ``seq_len`` tokens.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def make_prefill_step(model: Model, max_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len=max_len)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, batch, cache, pos):
+        return model.decode(params, batch, cache, pos)
+
+    return decode_step
+
+
+def sample_token(
+    logits: jnp.ndarray,  # (b, 1, vocab)
+    rng,
+    temperature: float = 1.0,
+) -> jnp.ndarray:
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def greedy_generate(
+    model: Model,
+    params,
+    prompt: Dict,
+    n_tokens: int,
+    max_len: int,
+):
+    """Simple autoregressive loop (tests/examples; jits each step once)."""
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=max_len))
+    decode = jax.jit(model.decode)
+    logits, cache = prefill(params, prompt)
+    b = logits.shape[0]
+    pos = prompt["tokens"].shape[1] if "tokens" in prompt else prompt["frame_embeds"].shape[1]
+    out = [jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]]
+    for i in range(n_tokens - 1):
+        batch = {"tokens": out[-1]}
+        logits, cache = decode(params, batch, cache, jnp.asarray(pos + i, jnp.int32))
+        out.append(jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None])
+    return jnp.concatenate(out, axis=1)

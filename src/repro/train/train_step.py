@@ -1,0 +1,118 @@
+"""Train-step factory: loss + grad (+ microbatch accumulation) + optimizer.
+
+``make_train_step(model, opt, run)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with in/out shardings. Microbatching scans over the leading
+batch split, accumulating grads in ``run.accum_dtype`` (bf16 accumulation
+halves the accumulator HBM for the biggest archs; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train.optimizer import AdamW
+
+
+@dataclass(frozen=True)
+class TrainRunConfig:
+    num_microbatches: int = 1
+    accum_dtype: str = "float32"
+    grad_transform: Optional[Callable] = None  # e.g. compression hook
+    # Sharding constraint for the microbatch grad accumulator. With FSDP
+    # params, leaving this None makes XLA reduce every microbatch's grads
+    # across the data axis to materialize the param-sharded accumulator —
+    # M x the collective traffic. Passing shardings with the data axis
+    # dropped keeps accumulation local (one reduce-scatter at the end),
+    # trading accumulator HBM (x data-axis size on the sharded dim) for
+    # ~M x less gradient collective volume. See EXPERIMENTS.md §Perf.
+    grad_accum_shardings: Optional[Any] = None
+
+
+def _split_microbatches(batch: Dict, n: int) -> Dict:
+    """(b, ...) -> (n, b/n, ...) on every leaf.
+
+    Strided grouping: microbatch j takes rows {j, n+j, 2n+j, ...}. With the
+    global batch sharded over the data axis in contiguous blocks, this
+    reshape+transpose keeps every microbatch spread across ALL data shards
+    (reshape (b,)->(b/n, n) splits the sharded dim cleanly; the microbatch
+    axis lands unsharded), so gradient accumulation stays fully
+    data-parallel with no resharding all-to-all.
+    """
+
+    def split(t):
+        b = t.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+        return jnp.swapaxes(t.reshape(b // n, n, *t.shape[1:]), 0, 1)
+
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(
+    model: Model,
+    opt: AdamW,
+    run: Optional[TrainRunConfig] = None,
+):
+    run = run or TrainRunConfig()
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    def compute_grads(params, batch):
+        n = run.num_microbatches
+        if n <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, grads
+        adt = jnp.dtype(run.accum_dtype)
+        mbs = _split_microbatches(batch, n)
+
+        def _constrain_acc(tree):
+            if run.grad_accum_shardings is None:
+                return tree
+            return jax.tree_util.tree_map(
+                lambda t, s: jax.lax.with_sharding_constraint(t, s),
+                tree,
+                run.grad_accum_shardings,
+            )
+
+        def body(carry, mb):
+            acc_loss, acc_grads = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            acc_grads = jax.tree_util.tree_map(
+                lambda a, g: (a + g.astype(adt)).astype(adt), acc_grads, grads
+            )
+            return (acc_loss + loss, _constrain_acc(acc_grads)), None
+
+        zeros = _constrain_acc(
+            jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.dtype(run.accum_dtype)), params
+            )
+        )
+        (loss_sum, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), mbs
+        )
+        inv = 1.0 / n
+        grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+        return loss_sum * inv, grads
+
+    def train_step(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
+        if run.grad_transform is not None:
+            grads = run.grad_transform(grads)
+        params, opt_state, metrics = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        return model.loss(params, batch)
+
+    return eval_step

@@ -1,0 +1,34 @@
+import os
+
+# Smoke tests and benches must see ONE device; only launch/dryrun.py forces
+# the 512-device host platform (and only in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_batch(cfg, b=2, s=16, seed=1):
+    """Batch dict matching an arch's input spec (smoke-sized)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    batch = {}
+    if cfg.frontend == "audio_frames":
+        batch["frame_embeds"] = jax.random.normal(ks[0], (b, s, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size)
+    batch["labels"] = jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size)
+    if cfg.frontend == "vision_patches":
+        batch["patch_embeds"] = jax.random.normal(
+            ks[2], (b, cfg.n_frontend_tokens, cfg.d_model), jnp.float32
+        )
+    if cfg.rope_variant == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(s)[None, None, :], (b, 3, s)).astype(jnp.int32)
+        batch["positions"] = pos
+    return batch

@@ -1,0 +1,132 @@
+"""Algorithm 1 / GPU-lane unit tests: safety condition, best-fit, lane
+replacement, refcounts, auto-defragmentation."""
+import pytest
+
+from repro.core import GB, MB, JobSpec, LaneRegistry, MemoryProfile, SafetyViolation
+
+
+def job(p_mb, e_mb, name="j", **kw):
+    kw.setdefault("n_iters", 10)
+    kw.setdefault("iter_time", 0.1)
+    return JobSpec(name=name, profile=MemoryProfile(p_mb * MB, e_mb * MB), **kw)
+
+
+def test_new_lane_created_when_room():
+    reg = LaneRegistry(16 * GB)
+    j = job(500, 7000)
+    lane = reg.job_arrive(j)
+    assert lane is not None
+    assert lane.size == 7000 * MB
+    assert reg.persistent_used == 500 * MB
+    reg.check_invariants()
+
+
+def test_best_fit_existing_lane():
+    reg = LaneRegistry(12 * GB)
+    l1 = reg.job_arrive(job(100, 7000))
+    l2 = reg.job_arrive(job(100, 4000))
+    # third job (E=3.5G) fits the 4G lane better than the 7G one, and a new
+    # 3.5G lane would exceed capacity (7000+4000+3500+300MB > 12GiB)
+    l3 = reg.job_arrive(job(100, 3500))
+    assert l3 is l2
+    assert l3.ref == 2
+    reg.check_invariants()
+
+
+def test_lane_replacement_grows_lane():
+    reg = LaneRegistry(10 * GB)
+    big = reg.job_arrive(job(100, 5000))
+    small = reg.job_arrive(job(100, 2000))
+    # E=6000: no existing lane fits, no room for a new lane; growing the
+    # 2000-lane to 6000 still doesn't fit, so Algorithm 1 resizes the
+    # 5000-lane to 6000 (respecting its resident's E).
+    j3 = job(100, 6000)
+    lane = reg.job_arrive(j3)
+    assert lane is big
+    assert lane.size == 6000 * MB
+    assert lane.ref == 2
+    reg.check_invariants()
+
+
+def test_replacement_never_squeezes_residents():
+    reg = LaneRegistry(10 * GB)
+    reg.job_arrive(job(100, 6000))
+    reg.job_arrive(job(100, 3500))
+    # E=3800 can't fit anywhere and can't displace residents
+    j = job(100, 3800)
+    lane = reg.job_arrive(j)
+    if lane is not None:
+        assert lane.size >= 3800 * MB
+        reg.check_invariants()
+    else:
+        assert j in reg.queue
+
+
+def test_identical_jobs_share_a_lane():
+    """Two jobs with the same E time-share one lane (the paper's SRTF/FAIR
+    single-lane setting) instead of queuing."""
+    reg = LaneRegistry(8 * GB)
+    j1, j2 = job(200, 7000), job(200, 7000)
+    l1 = reg.job_arrive(j1)
+    l2 = reg.job_arrive(j2)
+    assert l1 is l2 and l1.ref == 2
+    reg.check_invariants()
+
+
+def test_queue_and_admit_on_finish():
+    reg = LaneRegistry(8 * GB)
+    j1 = job(200, 7000)
+    j2 = job(500, 7500)  # doesn't fit alongside j1, but fits alone
+    assert reg.job_arrive(j1) is not None
+    assert reg.job_arrive(j2) is None  # queued
+    assert len(reg.queue) == 1
+    reg.job_finish(j1)
+    assert reg.assignment.get(j2.job_id) is not None
+    reg.check_invariants()
+
+
+def test_refcount_lane_deletion():
+    reg = LaneRegistry(16 * GB)
+    j1, j2 = job(100, 4000), job(100, 4000)
+    l1 = reg.job_arrive(j1)
+    reg.job_arrive(j2)
+    total_lanes = len(reg.lanes)
+    reg.job_finish(j1)
+    # j2 may share or own a lane; finishing both must drop all its lanes
+    reg.job_finish(j2)
+    assert all(l.ref > 0 for l in reg.lanes.values())
+    reg.check_invariants()
+
+
+def test_auto_defrag_compacts_and_is_zero_copy():
+    reg = LaneRegistry(16 * GB)
+    j1, j2, j3 = job(10, 4000), job(10, 5000), job(10, 4000)
+    for j in (j1, j2, j3):
+        reg.job_arrive(j)
+    lanes_before = {l.lane_id: l.base for l in reg.lanes.values()}
+    moves_before = reg.moves
+    # finishing the middle job frees its lane; lanes below shift up
+    reg.job_finish(j2)
+    reg.check_invariants()  # asserts contiguity (defrag happened)
+    assert reg.moves > moves_before  # lanes moved...
+    # ...and zero-copy: moves happen only at iteration boundaries when
+    # ephemeral regions are empty — the registry never touches job bytes
+    # (nothing to assert beyond the invariant: there is no copy API at all)
+
+
+def test_safety_condition_never_violated_on_oversubscribe():
+    reg = LaneRegistry(1 * GB)
+    admitted = []
+    for i in range(10):
+        j = job(50, 300, name=f"j{i}")
+        if reg.job_arrive(j) is not None:
+            admitted.append(j)
+    reg.check_invariants()
+    assert len(admitted) < 10  # some must queue
+    assert reg.persistent_used + reg.lane_total <= reg.capacity
+
+
+def test_bad_profile_rejected():
+    reg = LaneRegistry(GB)
+    with pytest.raises(ValueError):
+        reg.job_arrive(job(10, 0))

@@ -1,0 +1,78 @@
+"""Elastic scaling: checkpoint saved on one mesh restores onto another
+(subprocess with 8 forced devices; shrink 8 -> 4)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.ckpt.checkpoint import CheckpointManager
+    from repro.configs import get_config
+    from repro.dist.elastic import restore_on_mesh
+    from repro.dist.sharding import param_shardings
+    from repro.launch.mesh import make_mesh
+    from repro.models import ModelOptions, build_model
+
+    cfg = get_config("qwen3-8b").smoke()
+    model = build_model(cfg, ModelOptions(loss_chunk=8))
+    params = model.init(jax.random.PRNGKey(0))
+
+    mesh8 = make_mesh((4, 2), ("data", "model"))
+    sh8 = param_shardings(params, cfg, mesh8)
+    params8 = jax.device_put(params, sh8)
+
+    mgr = CheckpointManager("{ckpt_dir}", async_save=False)
+    mgr.save(5, params8)
+
+    # "lose" half the devices: restore onto a 2x2 mesh
+    mesh4 = make_mesh((2, 2), ("data", "model"))
+    step, params4, meta = restore_on_mesh(mgr, params, cfg, mesh4)
+    assert step == 5
+    # values identical regardless of mesh
+    a = jax.device_get(params8["final_norm"]["scale"])
+    b = jax.device_get(params4["final_norm"]["scale"])
+    np.testing.assert_array_equal(a, b)
+    l8 = jax.tree_util.tree_leaves(params8)
+    l4 = jax.tree_util.tree_leaves(params4)
+    ok = all(np.allclose(np.asarray(x), np.asarray(y)) for x, y in zip(l8, l4))
+    ndev = len(params4["final_norm"]["scale"].sharding.mesh.devices.flat)
+    print(json.dumps(dict(ok=bool(ok), ndev=ndev)))
+    """
+)
+
+
+def test_shrink_restore(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT.replace("{ckpt_dir}", str(tmp_path))],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ok"]
+    assert res["ndev"] == 4
+
+
+def test_shrink_mesh_math():
+    from repro.dist.fault import InjectedFailure  # noqa: F401
+    from repro.dist.elastic import shrink_mesh
+
+    # shrinking happens along data; model groups intact — just check the
+    # arithmetic via a tiny real mesh
+    import os as _os
+    # (runs in-process on 1 device: shape (1,1))
+    m = shrink_mesh((1, 1), ("data", "model"), lost=0)
+    assert dict(m.shape) == {"data": 1, "model": 1}

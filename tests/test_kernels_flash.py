@@ -1,0 +1,57 @@
+"""Flash-attention Pallas kernel: shape/dtype sweep vs the jnp oracle
+(interpret mode executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+CASES = [
+    # (b, sq, hq, hkv, d, causal, window, bq, bk)
+    (2, 128, 4, 2, 64, True, None, 64, 64),
+    (1, 256, 8, 1, 32, True, None, 128, 64),   # MQA
+    (2, 256, 4, 4, 64, True, 64, 64, 64),      # SWA
+    (1, 128, 2, 2, 128, False, None, 64, 64),  # bidirectional
+    (1, 512, 6, 3, 64, True, 128, 128, 128),   # GQA + SWA
+    (3, 64, 2, 1, 16, True, None, 64, 32),     # odd batch, tiny head
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_vs_ref(case, dtype):
+    b, s, hq, hkv, d, causal, window, bq, bk = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, block_q=bq, block_k=bk, interpret=True
+    )
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_flash_q_offset_matches_suffix():
+    """Decode-style: queries are a suffix of the sequence."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    b, s, h, d = 1, 256, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    full = attention_ref(q, k, v, causal=True)
+    tail = flash_attention(
+        q[:, 128:], k, v, causal=True, q_offset=128, block_q=64, block_k=64, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[:, 128:]), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_rejects_ragged():
+    q = jnp.zeros((1, 100, 2, 16))
+    with pytest.raises(ValueError):
+        flash_attention(q, q, q, block_q=64, block_k=64, interpret=True)

@@ -1,0 +1,24 @@
+"""Fused RMSNorm Pallas kernel vs oracle: shapes, dtypes, residual fusion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fused_rmsnorm.ops import rmsnorm
+from repro.kernels.fused_rmsnorm.ref import rmsnorm_ref
+
+
+@pytest.mark.parametrize("shape", [(4, 16, 64), (2, 32, 128), (7, 96), (1, 1, 256)])
+@pytest.mark.parametrize("residual", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_vs_ref(shape, residual, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jax.random.normal(ks[0], shape, dtype)
+    scale = (jax.random.normal(ks[1], (shape[-1],)) * 0.1 + 1.0).astype(dtype)
+    r = jax.random.normal(ks[2], shape, dtype) if residual else None
+    out = rmsnorm(x, scale, r, interpret=True)
+    ref = rmsnorm_ref(x, scale, r)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )

@@ -1,0 +1,160 @@
+"""Model-layer unit tests: chunked implementations vs sequential oracles,
+attention variants, M-RoPE, MoE dispatch vs dense reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.attention import (
+    causal_chunked_attention,
+    full_attention,
+    sliding_window_attention,
+    _windowed_full,
+)
+from repro.models.layers import apply_mrope, apply_rope, mrope_sections
+from repro.models.moe import moe_apply, moe_init, moe_reference
+from repro.models.rwkv import wkv_chunked, wkv_ref
+from repro.models.ssm import ssm_scan_chunked, ssm_scan_ref
+
+
+def keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+class TestAttention:
+    def test_causal_chunked_matches_full(self):
+        ks = keys(3)
+        b, s, hq, hkv, d = 2, 64, 4, 2, 16
+        q = jax.random.normal(ks[0], (b, s, hq, d))
+        k = jax.random.normal(ks[1], (b, s, hkv, d))
+        v = jax.random.normal(ks[2], (b, s, hkv, d))
+        out_full = full_attention(q, k, v, causal=True)
+        out_chunk = causal_chunked_attention(q, k, v, q_chunk=16)
+        np.testing.assert_allclose(np.asarray(out_chunk), np.asarray(out_full), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("window", [8, 16, 32])
+    def test_swa_scan_matches_masked_full(self, window):
+        ks = keys(3, 1)
+        b, s, hq, hkv, d = 2, 64, 4, 2, 16
+        q = jax.random.normal(ks[0], (b, s, hq, d))
+        k = jax.random.normal(ks[1], (b, s, hkv, d))
+        v = jax.random.normal(ks[2], (b, s, hkv, d))
+        out = sliding_window_attention(q, k, v, window)
+        ref = _windowed_full(q, k, v, window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+    def test_gqa_equals_repeated_mha(self):
+        """GQA with kv heads repeated explicitly == grouped computation."""
+        ks = keys(3, 2)
+        b, s, hq, hkv, d = 1, 32, 8, 2, 16
+        q = jax.random.normal(ks[0], (b, s, hq, d))
+        k = jax.random.normal(ks[1], (b, s, hkv, d))
+        v = jax.random.normal(ks[2], (b, s, hkv, d))
+        k_rep = jnp.repeat(k, hq // hkv, axis=2)
+        v_rep = jnp.repeat(v, hq // hkv, axis=2)
+        out_g = full_attention(q, k, v, causal=True)
+        out_r = full_attention(q, k_rep, v_rep, causal=True)
+        np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_r), rtol=1e-5, atol=1e-5)
+
+
+class TestPositional:
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 32))
+        pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+        y = apply_rope(x, pos, 10_000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1),
+            rtol=1e-4,
+        )
+
+    def test_rope_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n."""
+        d = 32
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, d))
+        def dot_at(m, n):
+            qm = apply_rope(q, jnp.full((1, 1), m), 10_000.0)
+            kn = apply_rope(k, jnp.full((1, 1), n), 10_000.0)
+            return float(jnp.sum(qm * kn))
+        assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+        assert dot_at(5, 3) != pytest.approx(dot_at(12, 3), rel=1e-2)
+
+    def test_mrope_sections_sum(self):
+        for hd in (64, 128, 256):
+            t, h, w = mrope_sections(hd)
+            assert t + h + w == hd // 2
+        assert mrope_sections(128) == (16, 24, 24)  # Qwen2-VL's split
+
+    def test_mrope_equals_rope_for_text(self):
+        """With t==h==w position ids (pure text), M-RoPE == RoPE."""
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 4, 32))
+        pos1d = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+        pos3d = jnp.stack([pos1d] * 3, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(apply_mrope(x, pos3d, 1e4)),
+            np.asarray(apply_rope(x, pos1d, 1e4)),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+class TestScans:
+    def test_wkv_chunked_vs_ref(self):
+        ks = keys(5, 4)
+        b, s, h, dk = 2, 48, 3, 8
+        r = jax.random.normal(ks[0], (b, s, h, dk))
+        k = jax.random.normal(ks[1], (b, s, h, dk))
+        v = jax.random.normal(ks[2], (b, s, h, dk))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, dk))) * 0.5 + 0.45
+        u = jax.random.normal(ks[4], (h, dk)) * 0.1
+        o1, s1 = wkv_ref(r, k, v, w, u)
+        o2, s2 = wkv_chunked(r, k, v, w, u, chunk=16)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+
+    def test_ssm_chunked_vs_ref(self):
+        ks = keys(5, 5)
+        b, s, c, n = 2, 32, 6, 4
+        dt = jax.nn.softplus(jax.random.normal(ks[0], (b, s, c)))
+        a = -jnp.exp(jax.random.normal(ks[1], (c, n)) * 0.3)
+        b_in = jax.random.normal(ks[2], (b, s, n))
+        c_in = jax.random.normal(ks[3], (b, s, n))
+        x = jax.random.normal(ks[4], (b, s, c))
+        y1, h1 = ssm_scan_ref(dt, a, b_in, c_in, x)
+        y2, h2 = ssm_scan_chunked(dt, a, b_in, c_in, x, chunk=8)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-4, atol=1e-4)
+
+
+class TestMoE:
+    def test_dispatch_matches_dense_reference(self):
+        cfg = get_config("mixtral-8x22b").smoke()
+        p = moe_init(jax.random.PRNGKey(7), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(8), (2, 16, cfg.d_model))
+        y1, aux1 = moe_apply(p, cfg, x, group_size=16, capacity_factor=8.0)
+        y2, aux2 = moe_reference(p, cfg, x)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+        assert float(aux1) == pytest.approx(float(aux2), rel=1e-5)
+
+    def test_capacity_drops_are_graceful(self):
+        """Tiny capacity drops tokens (gate contribution zero), never NaNs."""
+        cfg = get_config("qwen3-moe-235b-a22b").smoke()
+        p = moe_init(jax.random.PRNGKey(9), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(10), (2, 32, cfg.d_model))
+        y, aux = moe_apply(p, cfg, x, group_size=64, capacity_factor=0.25)
+        assert bool(jnp.isfinite(y).all())
+        # dropped tokens -> output strictly smaller norm than full capacity
+        y_full, _ = moe_apply(p, cfg, x, group_size=64, capacity_factor=8.0)
+        assert float(jnp.linalg.norm(y)) <= float(jnp.linalg.norm(y_full)) + 1e-3
+
+    def test_aux_loss_balanced_is_one(self):
+        """Uniform routing probabilities give aux loss ~= 1 (E * E*(1/E^2))."""
+        cfg = get_config("mixtral-8x22b").smoke()
+        from repro.models.moe import load_balance_loss
+        t, e, k = 512, cfg.n_experts, cfg.top_k
+        probs = jnp.full((t, e), 1.0 / e)
+        rng = jax.random.PRNGKey(0)
+        idx = jax.random.randint(rng, (t, k), 0, e)
+        loss = load_balance_loss(probs, idx, e)
+        assert float(loss) == pytest.approx(k, rel=0.1)

@@ -1,0 +1,116 @@
+"""Scenario tests lifted directly from the paper's figures/sections."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GB, MB, JobSpec, LaneRegistry, MemoryProfile, Simulator, get_policy
+
+
+def test_fig6_progressive_allocation_deadlock_prevented():
+    """Paper Fig. 6: jobs A and B (P=1 GB, E=7 GB each) on a 12 GB device.
+    Progressive kernel-level allocation deadlocks (4+1+3 and 4+1+3 collide
+    at 12 GB). Salus admits both jobs' persistent memory but serializes
+    their iterations in ONE 7 GB lane: the safety condition P_A + P_B +
+    max(E) = 9 <= 12 holds, and at least one job can always proceed."""
+    reg = LaneRegistry(12 * GB)
+    a = JobSpec("A", MemoryProfile(1 * GB, 7 * GB), n_iters=10, iter_time=0.1)
+    b = JobSpec("B", MemoryProfile(1 * GB, 7 * GB), n_iters=10, iter_time=0.1)
+    lane_a = reg.job_arrive(a)
+    lane_b = reg.job_arrive(b)
+    assert lane_a is not None and lane_b is not None, "both jobs admitted"
+    assert lane_a is lane_b, "one lane => iterations serialized => no deadlock"
+    assert reg.persistent_used + reg.lane_total == 9 * GB  # 2 P + one 7G lane
+    reg.check_invariants()
+    # and they both run to completion under any policy
+    jobs = [
+        JobSpec("A", MemoryProfile(1 * GB, 7 * GB), n_iters=5, iter_time=0.1),
+        JobSpec("B", MemoryProfile(1 * GB, 7 * GB), n_iters=5, iter_time=0.1),
+    ]
+    res = Simulator(12 * GB, get_policy("fair")).run(jobs)
+    assert all(s.iterations_done == 5 for s in res.stats.values())
+
+
+def test_obs2_persistent_smaller_than_ephemeral():
+    """Paper Obs. 2 on OUR models: persistent (params+opt) of a smoke train
+    step is comparable to or smaller than ephemeral for activation-heavy
+    configurations; more importantly, multiple jobs' persistent fits
+    alongside one job's ephemeral (the fast-switching enabler)."""
+    from repro.core.profiles import PAPER_WORKLOADS
+
+    for name, (p, e, _, _) in PAPER_WORKLOADS.items():
+        assert p < e or name.startswith("vae"), f"{name}: P={p} E={e}"
+    # >= 2 jobs' persistent + max ephemeral fits the paper's 16 GB GPU for
+    # every workload pair in Table 3
+    vals = list(PAPER_WORKLOADS.values())
+    import itertools
+
+    fits = sum(
+        (a[0] + b[0] + max(a[1], b[1])) * MB <= 16 * GB
+        for a, b in itertools.combinations(vals, 2)
+    )
+    total = len(vals) * (len(vals) - 1) // 2
+    assert fits / total > 0.95  # nearly every pair co-resides
+
+
+def test_switch_overhead_model_gandiva_vs_salus():
+    """§3.2/§5.1.2: second-scale (checkpoint) switching vs Salus's
+    sub-iteration switching, same trace, simulated."""
+    def mk():
+        return [
+            JobSpec("long", MemoryProfile(500 * MB, 4 * GB), n_iters=60, iter_time=0.5),
+            JobSpec("short", MemoryProfile(200 * MB, 2 * GB), n_iters=10,
+                    iter_time=0.5, arrival_time=3.0),
+        ]
+
+    salus = Simulator(16 * GB, get_policy("srtf"), switch_overhead=0.01).run(mk())
+    gandiva = Simulator(16 * GB, get_policy("srtf"), switch_overhead=1.0).run(mk())
+    assert salus.avg_jct < gandiva.avg_jct
+    short_s = [v for k, v in salus.stats.items() if salus.jobs[k].name == "short"][0]
+    short_g = [v for k, v in gandiva.stats.items() if gandiva.jobs[k].name == "short"][0]
+    assert short_s.jct < short_g.jct
+
+
+class TestRingCacheWrap:
+    """SWA ring KV cache past the window boundary (the long_500k regime)."""
+
+    def test_decode_matches_full_forward_after_wrap(self):
+        from repro.configs import get_config
+        from repro.models import ModelOptions, build_model
+
+        cfg = get_config("mixtral-8x22b").smoke()  # window 32 in smoke
+        assert cfg.sliding_window == 32
+        model = build_model(cfg, ModelOptions(
+            loss_chunk=8, moe_group=16, compute_dtype="float32",
+            param_dtype="float32",
+        ))
+        params = model.init(jax.random.PRNGKey(0))
+        b, s = 1, 48  # > window: the ring must wrap
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+        logits_full, _ = model.apply(params, {"tokens": tokens, "labels": tokens})
+        # decode token-by-token from scratch through the wrap point
+        cache = model.init_cache(b, s)
+        dec = jax.jit(model.decode)
+        for t in range(s):
+            logits, cache = dec(
+                params, {"tokens": tokens[:, t : t + 1]}, cache,
+                jnp.asarray(t, jnp.int32),
+            )
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(logits_full[:, s - 1]),
+            rtol=5e-3, atol=5e-3,
+        )
+
+
+def test_greedy_generate_runs():
+    from repro.configs import get_config
+    from repro.models import ModelOptions, build_model
+    from repro.train.serve_step import greedy_generate
+
+    cfg = get_config("qwen3-8b").smoke()
+    model = build_model(cfg, ModelOptions(loss_chunk=8))
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)}
+    out = greedy_generate(model, params, prompt, n_tokens=4, max_len=16)
+    assert out.shape == (2, 4)
+    assert bool((out >= 0).all()) and bool((out < cfg.vocab_size).all())
