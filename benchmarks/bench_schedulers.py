@@ -43,5 +43,23 @@ def run(n_jobs: int = 100, seed: int = 42):
     return results
 
 
+def main(argv=None):
+    import argparse
+    import json
+    from pathlib import Path
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-jobs", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--json", default=None, help="write per-policy summaries to this path")
+    args = ap.parse_args(argv)
+    results = run(n_jobs=args.n_jobs, seed=args.seed)
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(results, indent=2, default=float))
+        print(f"wrote {out}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Local mirror of .github/workflows/ci.yml — same env, same commands, so a
+# green run here means a green CI run.
+#
+#   scripts/ci_smoke.sh            # gate + tier-1 + benchmark smoke
+#   scripts/ci_smoke.sh --fast     # import gate only (<1 min)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS=cpu
+# NOTE: the multi-device subprocess tests (test_sharding / test_elastic /
+# launch.dryrun) force their own host device count in-process via
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 — do NOT export it
+# here, the rest of the suite must see exactly one device.
+
+echo "== import-smoke: pytest --collect-only =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest --collect-only -q >/dev/null
+echo "ok"
+
+if [[ "${1:-}" == "--fast" ]]; then
+    exit 0
+fi
+
+echo "== tier-1: ROADMAP verify command =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+echo "== benchmark smoke: scheduler policies on a tiny trace =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_schedulers \
+    --n-jobs 20 --json experiments/bench_schedulers_smoke.json

@@ -1,0 +1,22 @@
+"""Distributed-execution primitives: logical-axis sharding, fault
+tolerance, and elastic mesh reconfiguration.
+
+Layers:
+  * :mod:`repro.dist.api` — ``constrain`` / ``constrain_weight`` /
+    ``use_sharding``: the only surface model code touches. Every call is a
+    no-op when no sharding context is active, so single-device paths
+    (smoke tests, benchmarks) run unchanged.
+  * :mod:`repro.dist.sharding` — the ``_PARAM_RULES`` path-pattern table
+    plus param/batch/cache sharding builders used by launch + tests.
+  * :mod:`repro.dist.fault` — straggler monitoring, failure injection,
+    restart supervision.
+  * :mod:`repro.dist.elastic` — checkpoint restore onto a different
+    (shrunk/grown) mesh.
+"""
+from repro.dist.api import (  # noqa: F401
+    ShardingContext,
+    constrain,
+    constrain_weight,
+    current,
+    use_sharding,
+)

@@ -1,0 +1,123 @@
+"""Logical-axis sharding constraints for model code.
+
+Model files annotate activations/weights with *logical* axes
+(``"data"``, ``"model"``, ``"expert"``); a :class:`ShardingContext`
+(built by :func:`repro.dist.sharding.make_context`) maps them onto the
+physical mesh. With no active context every entry point returns its
+input unchanged, so the same model code runs single-device.
+
+Guards applied before emitting a constraint (falling back to
+replication for the offending dim):
+  * the logical axis must map to a mesh axis that exists,
+  * the dim size must divide the (product of the) mesh axis size(s),
+  * the annotation arity must match the array rank.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+# A physical assignment for one logical axis: a mesh axis name, or a tuple
+# of mesh axis names (e.g. data -> ("pod", "data") on multi-pod meshes).
+Physical = Union[str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _axes_size(mesh_shape: Dict[str, int], phys: Optional[Physical]) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        n = 1
+        for a in phys:
+            n *= mesh_shape.get(a, 0)
+        return n
+    return mesh_shape.get(phys, 0)
+
+
+def guarded_entries(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    phys_map: Dict[str, Physical],
+    mesh_shape: Dict[str, int],
+) -> list:
+    """Map logical axes to physical per dim, replicating any dim whose
+    axis is absent, trivial (size 1), or does not divide the dim size.
+    The single guard shared by activation constraints and the parameter/
+    cache sharding rules."""
+    entries = []
+    for dim, ax in zip(shape, axes):
+        phys = phys_map.get(ax) if ax is not None else None
+        size = _axes_size(mesh_shape, phys)
+        if phys is None or size <= 1 or dim % size != 0:
+            entries.append(None)
+        else:
+            entries.append(phys)
+    return entries
+
+
+@dataclass(frozen=True)
+class ShardingContext:
+    """Mesh + logical->physical axis mapping + global sharding policy."""
+
+    mesh: Any
+    axis_map: Dict[str, Physical] = field(default_factory=dict)
+    zero3: bool = False
+
+    def spec_for(
+        self, axes: Sequence[Optional[str]], shape: Sequence[int]
+    ) -> Optional[PartitionSpec]:
+        """Logical annotation -> PartitionSpec, or None (skip constraint)."""
+        if len(axes) != len(shape):
+            return None  # annotation written for a different layout variant
+        entries = guarded_entries(axes, shape, self.axis_map, dict(self.mesh.shape))
+        if all(e is None for e in entries):
+            return None
+        return PartitionSpec(*entries)
+
+
+def current() -> Optional[ShardingContext]:
+    """The active context installed by :func:`use_sharding`, or None."""
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(ctx: Optional[ShardingContext]):
+    """Install ``ctx`` as the active sharding context for this thread."""
+    prev = current()
+    _state.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _state.ctx = prev
+
+
+def _constrain(x, axes):
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = ctx.spec_for(tuple(axes), x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def constrain(x, axes: Sequence[Optional[str]]):
+    """Constrain an activation to logical ``axes``. No-op without a context."""
+    return _constrain(x, axes)
+
+
+def constrain_weight(w, axes: Sequence[Optional[str]]):
+    """Constrain a weight at its point of use.
+
+    Separate from :func:`constrain` so weight policy can diverge from
+    activation policy: under ZeRO-3 the *storage* spec carries an extra
+    data-axis shard, and this use-point constraint is what makes XLA
+    materialize the gathered weight just-in-time.
+    """
+    return _constrain(w, axes)

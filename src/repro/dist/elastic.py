@@ -1,0 +1,51 @@
+"""Elastic scaling: restore a checkpoint onto a *different* mesh.
+
+Checkpoints store host-local full arrays (see ckpt/checkpoint.py), so a
+restore is just ``device_put`` with the target mesh's shardings — the
+sharding rules recompute the layout for whatever mesh survives.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+from repro.dist.sharding import param_shardings
+
+
+def restore_on_mesh(
+    mgr, template, cfg, mesh, step: Optional[int] = None
+) -> Tuple[int, Any, Dict]:
+    """Restore the latest (or ``step``) checkpoint from ``mgr`` into the
+    structure of ``template``, sharded for ``mesh``.
+
+    Returns ``(step, tree, meta)`` — same contract as
+    ``CheckpointManager.restore_tree``, with every leaf living on
+    ``mesh`` per the param rules.
+    """
+    shardings = param_shardings(template, cfg, mesh)
+    return mgr.restore_tree(template, step=step, shardings=shardings)
+
+
+def shrink_mesh(shape: Sequence[int], axes: Sequence[str], lost: int):
+    """New mesh after losing ``lost`` devices: the leading (data) axis
+    absorbs the loss; trailing axes (model groups) stay intact.
+
+    The surviving device count must still fill whole data-groups —
+    otherwise the stranded remainder devices are dropped too.
+    """
+    from repro.launch.mesh import make_mesh
+
+    shape = tuple(int(s) for s in shape)
+    total = 1
+    for s in shape:
+        total *= s
+    rest = 1
+    for s in shape[1:]:
+        rest *= s
+    remaining = total - int(lost)
+    new_first = remaining // rest
+    if new_first < 1:
+        raise ValueError(
+            f"cannot shrink mesh {shape}: {lost} lost leaves fewer than one "
+            f"group of {rest} devices"
+        )
+    return make_mesh((new_first,) + shape[1:], tuple(axes))

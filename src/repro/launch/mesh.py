@@ -8,6 +8,16 @@ from __future__ import annotations
 import jax
 
 
+def _make(shape, axes):
+    # axis_types / AxisType landed after jax 0.4.x; Auto is the default
+    # behavior there, so only pass it where the API exists.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e pod slice: 16x16 = 256 chips per pod; 2 pods = 512 chips.
 
@@ -16,13 +26,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     in a real deployment)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (elastic reconfigurations, tests)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make(tuple(shape), tuple(axes))

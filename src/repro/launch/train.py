@@ -100,12 +100,24 @@ def main(argv=None):
         return params, opt_state, resid
 
     def resume_step() -> int:
+        if mgr is not None:
+            mgr.wait()  # drain in-flight async saves before picking latest
         if mgr is None or mgr.latest_step() is None:
             state["params"], state["opt"], state["resid"] = fresh_state()
             return 0
-        template = {"params": state["params"], "opt": state["opt"]}
-        step, tree, meta = mgr.restore_tree(template)
+        if "params" in state:
+            template = {"params": state["params"], "opt": state["opt"]}
+        else:  # fresh process resuming an existing run: abstract template
+            aparams = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            template = {"params": aparams, "opt": jax.eval_shape(opt.init, aparams)}
+        shardings = {
+            "params": param_shardings(template["params"], cfg, mesh),
+            "opt": param_shardings(template["opt"], cfg, mesh),
+        }
+        step, tree, meta = mgr.restore_tree(template, shardings=shardings)
         state["params"], state["opt"] = tree["params"], tree["opt"]
+        if compressor is not None and state.get("resid") is None:
+            state["resid"] = compressor.init(state["params"])
         print(f"[train] resumed from checkpoint step {step}")
         return step
 

@@ -1,0 +1,110 @@
+"""Edge cases of the repro.dist subsystem: replication fallback on
+non-dividing dims, no-op behavior outside any mesh context, ZeRO-3 spec
+augmentation, batch/cache guards, and shrink-mesh arithmetic."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.dist import sharding as sh
+from repro.dist.api import constrain, constrain_weight, current, use_sharding
+from repro.dist.fault import FailureInjector, InjectedFailure, StragglerMonitor
+from repro.launch.mesh import make_mesh
+
+
+class Mesh16:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+ARCH = get_config("qwen3-8b")
+
+
+def test_param_spec_replicates_non_dividing_dims():
+    # 4 experts on a 16-way model axis: 4 % 16 != 0 -> expert dim replicated
+    spec = sh.param_spec(("m", "layers", "moe", "w_gate"), (48, 4, 64, 128), ARCH, Mesh16())
+    assert spec == PartitionSpec(None, None, None, None)
+    # 64-wide q_dim divides 16 -> sharded as written
+    spec = sh.param_spec(("layers", "attn", "wq"), (48, 64, 64), ARCH, Mesh16())
+    assert spec == PartitionSpec(None, None, "model")
+    # odd head count does not divide -> that dim falls back, rest keeps
+    spec = sh.param_spec(("layers", "attn", "wq"), (48, 64, 40), ARCH, Mesh16())
+    assert spec == PartitionSpec(None, None, None)
+
+
+def test_param_spec_unmatched_path_is_replicated():
+    spec = sh.param_spec(("final_norm", "scale"), (64,), ARCH, Mesh16())
+    assert spec == PartitionSpec(None)
+    spec = sh.param_spec(("step",), (), ARCH, Mesh16())
+    assert spec == PartitionSpec()
+
+
+def test_param_spec_zero3_adds_data_axis_but_skips_layer_dim():
+    spec = sh.param_spec(
+        ("layers", "attn", "wq"), (48, 64, 64), ARCH, Mesh16(), zero3=True
+    )
+    # largest replicated dim (d_model) takes the data shard; dim 0 (the
+    # stacked layer axis) must stay untouched even though 48 % 16 == 0
+    assert spec == PartitionSpec(None, "data", "model")
+
+
+def test_use_sharding_noop_outside_mesh_context():
+    assert current() is None
+    x = jnp.ones((4, 8, 16))
+    # identical object back: no constraint op inserted at all
+    assert constrain(x, ("data", None, None)) is x
+    assert constrain_weight(x, (None, None, "model")) is x
+    # arity mismatch inside an active context is also a no-op
+    mesh = make_mesh((1, 1), ("data", "model"))
+    ctx = sh.make_context(mesh, ARCH.smoke())
+    with use_sharding(ctx):
+        assert current() is ctx
+        assert constrain(x, ("data", None)) is x
+    assert current() is None
+
+
+def test_batch_shardings_replicate_when_batch_too_small():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = ARCH.smoke()
+    b_sh = sh.batch_shardings(cfg, ShapeConfig("t", "train", 16, 1), mesh)
+    assert set(b_sh) == {"tokens", "labels"}
+    for s in b_sh.values():
+        assert s.spec == PartitionSpec(None, None)
+
+
+def test_cache_shardings_cover_stacked_and_per_layer_layouts():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = ARCH.smoke()
+    shape = ShapeConfig("d", "decode", 32, 4)
+    stacked = {"k": jnp.zeros((2, 4, 32, 2, 16)), "v": jnp.zeros((2, 4, 32, 2, 16))}
+    per_layer = {"k": jnp.zeros((4, 32, 2, 16))}
+    for cache in (stacked, per_layer):
+        out = sh.cache_shardings(cache, cfg, shape, mesh)
+        assert set(out) == set(cache)
+
+
+def test_straggler_monitor_quiet_during_warmup():
+    mon = StragglerMonitor(k=3.0, warmup=5)
+    # a wild outlier inside the warmup window must not flag
+    assert mon.observe(0, 1.0) is None
+    assert mon.observe(1, 100.0) is None
+    assert mon.flagged == []
+
+
+def test_injector_each_step_fires_independently():
+    inj = FailureInjector([2, 5])
+    inj.maybe_fail(0)
+    with pytest.raises(InjectedFailure):
+        inj.maybe_fail(2)
+    inj.maybe_fail(2)  # consumed
+    with pytest.raises(InjectedFailure):
+        inj.maybe_fail(5)
+
+
+def test_shrink_mesh_rejects_losing_all_groups():
+    from repro.dist.elastic import shrink_mesh
+
+    with pytest.raises(ValueError, match="shrink"):
+        shrink_mesh((1, 1), ("data", "model"), lost=1)
