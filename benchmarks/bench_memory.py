@@ -1,25 +1,39 @@
-"""Paper Figures 1/2/5 + §3.2.1: the memory taxonomy that justifies Salus.
+"""Paper Figures 1/2/5/7 + §3.2.1/§3.3: memory taxonomy + fungible memory.
 
-Measures persistent (model + framework) vs ephemeral (per-iteration) memory
-of REAL compiled training steps for our smoke-scale models via
-``memory_analysis`` — the JAX analogue of the paper's allocator traces —
-and reports the persistent:ephemeral ratio (paper: persistent is a small
-fraction, enabling resident fast switching)."""
+Two sections:
+
+1. ``taxonomy()`` — measures persistent (model + framework) vs ephemeral
+   (per-iteration) memory of REAL compiled training steps for our
+   smoke-scale models via ``memory_analysis`` — the JAX analogue of the
+   paper's allocator traces — and reports the persistent:ephemeral ratio
+   (paper: persistent is a small fraction, enabling resident fast
+   switching).
+
+2. ``overcommit()`` — the Fig. 7 regime made runnable: a seeded tracegen
+   workload whose aggregate demand is ``--overcommit-factor`` x device
+   capacity, simulated with the fungible-memory subsystem off and on.
+   Reports completions, queuing/JCT, page-out/in counts, transfer seconds,
+   and second-chance re-admissions. ``--json`` writes the per-policy
+   summaries (tracked by CI as the bench-memory-smoke artifact);
+   ``--fast`` skips the compile-heavy taxonomy section.
+"""
 from __future__ import annotations
 
-import jax
-
-from benchmarks.common import emit, time_fn
-from repro.configs import ARCHS as ALL_ARCHS, get_config
-from repro.core.profiles import PAPER_WORKLOADS, profile_executable
-from repro.data.pipeline import SyntheticLM
-from repro.models import ModelOptions, build_model
-from repro.train.optimizer import AdamW, AdamWConfig
-from repro.train.train_step import make_train_step
+from benchmarks.common import emit
+from repro.core import GB, MemoryConfig, Simulator, get_policy
+from repro.core.tracegen import generate_trace
 
 
-def run():
+def taxonomy():
+    import jax
     import jax.numpy as jnp
+
+    from repro.configs import ARCHS as ALL_ARCHS, get_config
+    from repro.core.profiles import PAPER_WORKLOADS, profile_executable
+    from repro.data.pipeline import SyntheticLM
+    from repro.models import ModelOptions, build_model
+    from repro.train.optimizer import AdamW, AdamWConfig
+    from repro.train.train_step import make_train_step
 
     for name in sorted(ALL_ARCHS):
         cfg = get_config(name).smoke()
@@ -64,5 +78,107 @@ def run():
     )
 
 
+def overcommit(
+    factor: float = 4.0,
+    n_jobs: int = 16,
+    seed: int = 7,
+    policies=("srtf", "pack"),
+    page_bandwidth: float = 12 * GB,
+):
+    """Aggregate demand = factor x capacity: the overcommit regime where
+    admission control, host paging, and the second-chance queue earn their
+    keep. Returns {policy: {"paging_off": summary, "paging_on": summary}}."""
+    results = {}
+    for pol in policies:
+        per_pol = {}
+        for label, cfg in (
+            ("paging_off", MemoryConfig()),
+            ("paging_on", MemoryConfig(paging=True, page_bandwidth=page_bandwidth)),
+        ):
+            jobs = generate_trace(n_jobs=n_jobs, seed=seed, mean_interarrival=30.0)
+            demand = sum(j.profile.total for j in jobs)
+            capacity = int(demand / factor)
+            res = Simulator(capacity, get_policy(pol), memory=cfg).run(jobs)
+            s = res.summary()
+            s["capacity_gb"] = capacity / GB
+            s["overcommit_factor"] = factor
+            per_pol[label] = s
+            emit(
+                f"fig7_overcommit_{pol}_{label}",
+                0.0,
+                f"completed={s['completed']}/{s['n_jobs']};rejected={s['rejected']};"
+                f"avg_jct_min={s['avg_jct']/60:.1f};avg_queue_min={s['avg_queuing']/60:.1f};"
+                f"page_outs={s['page_outs']};page_ins={s['page_ins']};"
+                f"second_chance={s['second_chance_admits']};"
+                f"transfer_s={s['transfer_seconds']:.1f}",
+            )
+        off, on = per_pol["paging_off"], per_pol["paging_on"]
+        if off["avg_queuing"] > 0:
+            emit(
+                f"fig7_paging_gain_{pol}",
+                0.0,
+                f"queue_improvement={off['avg_queuing']/max(on['avg_queuing'],1e-9):.2f}x;"
+                f"jct_ratio={off['avg_jct']/max(on['avg_jct'],1e-9):.2f}x",
+            )
+        results[pol] = per_pol
+    return results
+
+
+def run(
+    overcommit_factor: float = 4.0,
+    fast: bool = False,
+    n_jobs: int = 16,
+    seed: int = 7,
+    page_bandwidth: float = 12 * GB,
+):
+    if not fast:
+        taxonomy()
+    return overcommit(
+        factor=overcommit_factor,
+        n_jobs=n_jobs,
+        seed=seed,
+        page_bandwidth=page_bandwidth,
+    )
+
+
+def main(argv=None):
+    import argparse
+    import json
+    from pathlib import Path
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--overcommit-factor",
+        type=float,
+        default=4.0,
+        help="aggregate demand / device capacity for the Fig. 7 scenario",
+    )
+    ap.add_argument("--n-jobs", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument(
+        "--page-bandwidth-gbs",
+        type=float,
+        default=12.0,
+        help="modeled host-link bandwidth (GB/s) for paging transfer costs",
+    )
+    ap.add_argument(
+        "--fast", action="store_true", help="skip the compile-heavy taxonomy section"
+    )
+    ap.add_argument("--json", default=None, help="write overcommit summaries here")
+    args = ap.parse_args(argv)
+    results = run(
+        overcommit_factor=args.overcommit_factor,
+        fast=args.fast,
+        n_jobs=args.n_jobs,
+        seed=args.seed,
+        page_bandwidth=args.page_bandwidth_gbs * GB,
+    )
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(results, indent=2, default=float))
+        print(f"wrote {out}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -7,16 +7,24 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import emit
-from repro.core import GB, Simulator, get_policy
+from repro.core import GB, MemoryConfig, Simulator, get_policy
 from repro.core.tracegen import generate_trace
 
 
-def run(n_jobs: int = 100, seed: int = 42):
+def run(
+    n_jobs: int = 100,
+    seed: int = 42,
+    capacity_gb: float = 16.0,
+    paging: bool = False,
+    page_bandwidth: float = 12 * GB,
+):
+    capacity = int(capacity_gb * GB)
+    memcfg = lambda: MemoryConfig(paging=paging, page_bandwidth=page_bandwidth)
     results = {}
     for pol in ("fifo", "srtf", "pack", "fair"):
         jobs = generate_trace(n_jobs=n_jobs, seed=seed)
         t0 = time.perf_counter()
-        res = Simulator(capacity=16 * GB, policy=get_policy(pol)).run(jobs)
+        res = Simulator(capacity=capacity, policy=get_policy(pol), memory=memcfg()).run(jobs)
         sim_us = (time.perf_counter() - t0) * 1e6
         s = res.summary()
         results[pol] = s
@@ -25,14 +33,15 @@ def run(n_jobs: int = 100, seed: int = 42):
             sim_us,
             f"makespan_min={s['makespan']/60:.1f};avg_queue_min={s['avg_queuing']/60:.1f};"
             f"avg_jct_min={s['avg_jct']/60:.1f};p95_jct_min={s['p95_jct']/60:.1f};"
-            f"lane_moves={s['lane_moves']}",
+            f"lane_moves={s['lane_moves']};page_outs={s['page_outs']};"
+            f"second_chance={s['second_chance_admits']}",
         )
     ratio = results["fifo"]["avg_jct"] / results["srtf"]["avg_jct"]
     emit("table2_srtf_vs_fifo_avg_jct", 0.0, f"improvement={ratio:.2f}x;paper=3.19x")
     # CDF quartiles for Fig. 8
     for pol in ("fifo", "srtf", "pack", "fair"):
         jobs = generate_trace(n_jobs=n_jobs, seed=seed)
-        res = Simulator(capacity=16 * GB, policy=get_policy(pol)).run(jobs)
+        res = Simulator(capacity=capacity, policy=get_policy(pol), memory=memcfg()).run(jobs)
         jcts = sorted(res.jcts)
         q = lambda p: jcts[int(p * (len(jcts) - 1))] / 60
         emit(
@@ -51,9 +60,27 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--n-jobs", type=int, default=100)
     ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--capacity-gb", type=float, default=16.0, help="device memory")
+    ap.add_argument(
+        "--paging",
+        action="store_true",
+        help="enable fungible-memory host paging (MemoryManager)",
+    )
+    ap.add_argument(
+        "--page-bandwidth-gbs",
+        type=float,
+        default=12.0,
+        help="modeled host-link bandwidth (GB/s) for paging transfer costs",
+    )
     ap.add_argument("--json", default=None, help="write per-policy summaries to this path")
     args = ap.parse_args(argv)
-    results = run(n_jobs=args.n_jobs, seed=args.seed)
+    results = run(
+        n_jobs=args.n_jobs,
+        seed=args.seed,
+        capacity_gb=args.capacity_gb,
+        paging=args.paging,
+        page_bandwidth=args.page_bandwidth_gbs * GB,
+    )
     if args.json:
         out = Path(args.json)
         out.parent.mkdir(parents=True, exist_ok=True)

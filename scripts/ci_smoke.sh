@@ -27,3 +27,7 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 echo "== benchmark smoke: scheduler policies on a tiny trace =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_schedulers \
     --n-jobs 20 --json experiments/bench_schedulers_smoke.json
+
+echo "== benchmark smoke: fungible memory (Fig. 7 overcommit regime) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_memory \
+    --fast --overcommit-factor 4.0 --json experiments/bench_memory_smoke.json

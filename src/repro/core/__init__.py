@@ -10,13 +10,27 @@ Public surface:
 from repro.core.adaptor import VirtualDevice
 from repro.core.executor import SalusExecutor
 from repro.core.lanes import Lane, LaneRegistry, SafetyViolation
+from repro.core.memory import MemoryConfig, MemoryManager
 from repro.core.scheduler import FAIR, FIFO, PACK, SRTF, Policy, get_policy
 from repro.core.simulator import SimResult, Simulator
-from repro.core.types import GB, MB, JobSpec, JobState, JobStats, MemoryProfile
+from repro.core.types import (
+    GB,
+    MB,
+    JobSpec,
+    JobState,
+    JobStats,
+    MemoryEvent,
+    MemoryEventKind,
+    MemoryProfile,
+)
 
 __all__ = [
     "VirtualDevice",
     "SalusExecutor",
+    "MemoryConfig",
+    "MemoryManager",
+    "MemoryEvent",
+    "MemoryEventKind",
     "Lane",
     "LaneRegistry",
     "SafetyViolation",

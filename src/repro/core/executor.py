@@ -6,9 +6,27 @@ iteration granularity by the configured policy. Persistent state (param
 arrays) never leaves the device between switches — switching cost is just
 dispatching a different executable, measured and reported.
 
+Memory admission goes through the shared :class:`MemoryManager` (the same
+decision logic, verbatim, that the discrete-event simulator runs): deficit
+admission control, second-chance retries at iteration boundaries, and —
+when paging is enabled — real host round-trips of a session's persistent
+arrays (``jax.device_get`` / ``jax.device_put``) when ephemeral pressure
+forces a victim's P off-device.
+
 On a one-core host, cross-lane parallelism is time-multiplexed dispatch
 (DESIGN.md §2); the executor interleaves lanes round-robin, one iteration
 per turn, which preserves the serialization-within-lane invariant.
+
+``accounting``:
+  * ``"wall"`` (default) — policy-visible service times are measured
+    wall-clock, the live-serving behavior.
+  * ``"nominal"`` — policy-visible service accrues the job's *declared*
+    ``iter_time`` per iteration instead of the measured duration. Wall
+    times are still measured and reported (records, JCTs); only scheduling
+    decisions use nominal time. This makes the decision sequence a pure
+    function of the trace — the property the simulator<->executor
+    differential suite locks down (timing noise cannot flip near-tie
+    policy comparisons).
 """
 from __future__ import annotations
 
@@ -16,10 +34,20 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+import jax
+
 from repro.core.lanes import Lane, LaneRegistry
+from repro.core.memory import MemoryConfig, MemoryManager
 from repro.core.scheduler import Policy
 from repro.core.session import Session
-from repro.core.types import IterationRecord, JobSpec, JobState, JobStats
+from repro.core.types import (
+    IterationRecord,
+    JobSpec,
+    JobState,
+    JobStats,
+    MemoryEvent,
+    MemoryEventKind,
+)
 
 
 @dataclass
@@ -29,6 +57,9 @@ class ExecutorReport:
     makespan: float
     switch_latencies: List[float]
     registry_stats: Dict
+    transfer_latencies: List[float] = field(default_factory=list)
+    memory_events: List[MemoryEvent] = field(default_factory=list)
+    decision_log: List[tuple] = field(default_factory=list)
 
     @property
     def avg_jct(self) -> float:
@@ -37,14 +68,27 @@ class ExecutorReport:
 
 
 class SalusExecutor:
-    def __init__(self, capacity: int, policy: Policy):
+    def __init__(
+        self,
+        capacity: int,
+        policy: Policy,
+        memory: Optional[MemoryConfig] = None,
+        accounting: str = "wall",
+    ):
+        if accounting not in ("wall", "nominal"):
+            raise ValueError(f"accounting must be wall|nominal, got {accounting!r}")
         self.registry = LaneRegistry(capacity)
+        self.memory = MemoryManager(self.registry, memory, pager=self._do_transfer)
+        self.memory.on_admit = self._on_admit
+        self.memory.on_event = self._on_mem_event
         self.policy = policy
+        self.accounting = accounting
         self.sessions: Dict[int, Session] = {}
         self.stats: Dict[int, JobStats] = {}
         self.state: Dict[int, JobState] = {}
         self.records: List[IterationRecord] = []
         self.switch_latencies: List[float] = []
+        self.transfer_latencies: List[float] = []
         self._last_job_on: Dict[int, int] = {}
         self._t0: Optional[float] = None
 
@@ -61,15 +105,50 @@ class SalusExecutor:
         self.sessions[job.job_id] = session
         self.stats[job.job_id] = JobStats(arrival_time=self.now())
         self.state[job.job_id] = JobState.QUEUED
+        self.memory.job_arrive(job, self.now())
 
-        def on_admit(j: JobSpec, lane: Lane):
-            st = self.stats[j.job_id]
-            if st.admit_time is None:
-                st.admit_time = self.now()
-            self.state[j.job_id] = JobState.READY
+    # ------------------------------------------------------------------
+    # Memory-manager hooks (the live side of the shared decision core)
+    # ------------------------------------------------------------------
 
-        self.registry.on_admit = on_admit
-        self.registry.job_arrive(job)
+    def _do_transfer(self, direction: str, job: JobSpec) -> float:
+        """Really move the session's persistent arrays across the host link.
+        Paged-out state lives as host (numpy) buffers; page-in puts it back
+        on the device and blocks until resident."""
+        sess = self.sessions.get(job.job_id)
+        t0 = time.perf_counter()
+        if sess is not None:
+            if direction == "out":
+                sess.state = jax.device_get(sess.state)
+            else:
+                sess.state = jax.device_put(sess.state)
+                jax.block_until_ready(sess.state)
+        dt = time.perf_counter() - t0
+        self.transfer_latencies.append(dt)
+        return dt
+
+    def _on_admit(self, job: JobSpec, lane: Lane) -> None:
+        st = self.stats[job.job_id]
+        if st.admit_time is None:
+            st.admit_time = self.now()
+        self.state[job.job_id] = JobState.READY
+
+    def _on_mem_event(self, ev: MemoryEvent) -> None:
+        if ev.kind is MemoryEventKind.PAGE_OUT:
+            self.state[ev.job_id] = JobState.PAGED
+            self.stats[ev.job_id].page_outs += 1
+            self.stats[ev.job_id].transfer_time += ev.cost
+        elif ev.kind is MemoryEventKind.PAGE_IN:
+            self.state[ev.job_id] = JobState.READY
+            self.stats[ev.job_id].page_ins += 1
+            self.stats[ev.job_id].transfer_time += ev.cost
+        elif ev.kind is MemoryEventKind.REJECT:
+            self.stats[ev.job_id].rejected = True
+            self.state[ev.job_id] = JobState.FINISHED
+        elif ev.kind is MemoryEventKind.SECOND_CHANCE:
+            self.stats[ev.job_id].second_chances = self.memory.chances.get(
+                ev.job_id, 0
+            )
 
     # ------------------------------------------------------------------
 
@@ -100,19 +179,29 @@ class SalusExecutor:
         dur = sess.run_iteration(st.iterations_done)
         end = self.now()
         st.iterations_done += 1
-        st.service_time += dur
+        st.service_time += dur if self.accounting == "wall" else job.iter_time
         self.records.append(
             IterationRecord(job.job_id, st.iterations_done - 1, end - dur, end, lane.lane_id)
         )
         if sess.finished:
             self.state[job.job_id] = JobState.FINISHED
             st.finish_time = end
-            self.registry.job_finish(job)
+            self.memory.job_finish(job, end)
         else:
             self.state[job.job_id] = JobState.READY
+        # second-chance tick: between iterations the ephemeral region is
+        # empty, so pending jobs may be re-admitted and P pages may move
+        self.memory.iteration_boundary(self.now())
+
+    def _done(self) -> bool:
+        return all(
+            s is JobState.FINISHED or self.sessions[j].finished
+            for j, s in self.state.items()
+        )
 
     def run(self, max_wall: Optional[float] = None) -> ExecutorReport:
         """Drive all submitted sessions to completion."""
+        blocked = lambda: frozenset(self.registry.paged)
         while True:
             if max_wall is not None and self.now() > max_wall:
                 break
@@ -121,7 +210,7 @@ class SalusExecutor:
                 ready = [
                     j for lane in self.registry.lanes.values() for j in self._candidates(lane)
                 ]
-                job = self.policy.select(ready, self.stats, self.now())
+                job = self.policy.select(ready, self.stats, self.now(), blocked=blocked())
                 if job is not None:
                     for other in ready:
                         if other is not job and self.stats[other.job_id].iterations_done:
@@ -133,23 +222,37 @@ class SalusExecutor:
             else:
                 # round-robin across lanes: one iteration per lane per sweep
                 for lane in list(self.registry.lanes.values()):
-                    job = self.policy.select(self._candidates(lane), self.stats, self.now())
+                    if lane.lane_id not in self.registry.lanes:
+                        continue  # lane deleted by a finish earlier this sweep
+                    job = self.policy.select(
+                        self._candidates(lane), self.stats, self.now(), blocked=blocked()
+                    )
                     if job is not None:
                         self._run_one(lane, job)
                         progressed = True
             if not progressed:
-                if all(
-                    s in (JobState.FINISHED,) or self.sessions[j].finished
-                    for j, s in self.state.items()
-                ):
+                if self._done():
                     break
-                if self.registry.queue:
-                    # queued jobs that can never fit => deadlock guard
+                # one more boundary tick: paging / second chance may unblock
+                if self.memory.iteration_boundary(self.now()):
+                    continue
+                if self.registry.queue or self.registry.paged:
+                    # pending jobs that can never fit => deadlock guard
                     raise RuntimeError(
-                        f"stalled: {len(self.registry.queue)} jobs queued, none runnable"
+                        f"stalled: {len(self.registry.queue)} queued, "
+                        f"{len(self.registry.paged)} paged out, none runnable"
                     )
                 break
+        for jid, st in self.stats.items():
+            st.second_chances = max(st.second_chances, self.memory.chances.get(jid, 0))
         makespan = self.now()
         return ExecutorReport(
-            self.stats, self.records, makespan, self.switch_latencies, self.registry.stats()
+            self.stats,
+            self.records,
+            makespan,
+            self.switch_latencies,
+            self.memory.stats(),
+            transfer_latencies=self.transfer_latencies,
+            memory_events=self.memory.events,
+            decision_log=self.memory.decision_log(),
         )

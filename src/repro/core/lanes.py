@@ -57,6 +57,7 @@ class LaneRegistry:
         self.on_admit: Optional[Callable[[JobSpec, Lane], None]] = None
         self.on_lane_moved: Optional[Callable[[Lane], None]] = None
         self.moves = 0  # defrag lane-move count (all zero-copy)
+        self.paged: set = set()  # job_ids whose persistent region lives on host
 
     # ------------------------------------------------------------------
     # Invariants
@@ -110,17 +111,27 @@ class LaneRegistry:
         return self.assignment.get(job.job_id)
 
     def job_finish(self, job: JobSpec) -> None:
-        """JOBFINISH: drop refcount; delete the lane at zero; defrag; retry Q."""
+        """JOBFINISH: drop refcount; delete the lane at zero; defrag; retry Q.
+        When the departing job was the lane's largest, the lane shrinks to the
+        remaining residents' max E (shrink is part of auto-defrag: between
+        iterations the ephemeral region is empty, so it is zero-copy)."""
         lane = self.assignment.pop(job.job_id, None)
         if lane is None:
             if job in self.queue:  # finished (killed) while still queued
                 self.queue.remove(job)
             return
         lane.jobs.remove(job)
-        self.persistent_used -= job.profile.persistent
+        if job.job_id in self.paged:
+            self.paged.discard(job.job_id)  # persistent already off-device
+        else:
+            self.persistent_used -= job.profile.persistent
         if lane.ref == 0:
             del self.lanes[lane.lane_id]
             self._defragment()
+        else:
+            new_size = max(j.profile.ephemeral for j in lane.jobs)
+            if new_size < lane.size:
+                self._resize_lane(lane, new_size)
         self.process_requests()
 
     def process_requests(self) -> None:
@@ -166,6 +177,39 @@ class LaneRegistry:
         return None
 
     # ------------------------------------------------------------------
+    # Fungible persistent memory: host paging hooks (used by MemoryManager)
+    # ------------------------------------------------------------------
+
+    def page_out(self, job: JobSpec) -> int:
+        """Move ``job``'s persistent region off-device. The job keeps its lane
+        (its L_j reservation survives — E is fungible only across iterations,
+        P only across the host link) but cannot run until paged back in.
+        Returns the number of bytes freed on-device."""
+        if job.job_id not in self.assignment:
+            raise ValueError(f"page_out of unassigned job {job.name}")
+        if job.job_id in self.paged:
+            raise ValueError(f"{job.name} already paged out")
+        self.paged.add(job.job_id)
+        self.persistent_used -= job.profile.persistent
+        return job.profile.persistent
+
+    def can_page_in(self, job: JobSpec) -> bool:
+        return job.job_id in self.paged and self.safety_ok(
+            extra_p=job.profile.persistent
+        )
+
+    def page_in(self, job: JobSpec) -> int:
+        """Bring a paged-out persistent region back on-device."""
+        if job.job_id not in self.paged:
+            raise ValueError(f"page_in of non-paged job {job.name}")
+        if not self.safety_ok(extra_p=job.profile.persistent):
+            raise SafetyViolation(f"page_in of {job.name} would violate safety")
+        self.paged.discard(job.job_id)
+        self.persistent_used += job.profile.persistent
+        self.check_invariants()
+        return job.profile.persistent
+
+    # ------------------------------------------------------------------
     # Layout management (top-down contiguous lanes) + auto-defrag
     # ------------------------------------------------------------------
 
@@ -208,4 +252,5 @@ class LaneRegistry:
             "queued": len(self.queue),
             "free": self.capacity - self.persistent_used - self.lane_total,
             "moves": self.moves,
+            "paged": len(self.paged),
         }

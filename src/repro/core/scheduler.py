@@ -12,9 +12,11 @@ Two execution regimes (paper §5.1):
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, FrozenSet, List, Optional
 
 from repro.core.types import JobSpec, JobStats
+
+_NONE_BLOCKED: FrozenSet[int] = frozenset()
 
 
 class Policy:
@@ -26,8 +28,20 @@ class Policy:
         candidates: List[JobSpec],
         stats: Dict[int, JobStats],
         now: float,
+        blocked: FrozenSet[int] = _NONE_BLOCKED,
     ) -> Optional[JobSpec]:
         raise NotImplementedError
+
+    @staticmethod
+    def eligible(
+        candidates: List[JobSpec], blocked: FrozenSet[int]
+    ) -> List[JobSpec]:
+        """Drop jobs whose persistent region is paged out to host: they hold
+        a lane but cannot run an iteration until the memory manager pages
+        them back in at a boundary."""
+        if not blocked:
+            return candidates
+        return [j for j in candidates if j.job_id not in blocked]
 
     def __repr__(self):
         return f"<{type(self).__name__}>"
@@ -40,7 +54,8 @@ class FIFO(Policy):
     name = "fifo"
     exclusive = True
 
-    def select(self, candidates, stats, now):
+    def select(self, candidates, stats, now, blocked=_NONE_BLOCKED):
+        candidates = self.eligible(candidates, blocked)
         if not candidates:
             return None
         return min(candidates, key=lambda j: (j.arrival_time, j.job_id))
@@ -56,7 +71,8 @@ class SRTF(Policy):
     name = "srtf"
     exclusive = True
 
-    def select(self, candidates, stats, now):
+    def select(self, candidates, stats, now, blocked=_NONE_BLOCKED):
+        candidates = self.eligible(candidates, blocked)
         if not candidates:
             return None
 
@@ -74,7 +90,8 @@ class PACK(Policy):
     name = "pack"
     exclusive = False
 
-    def select(self, candidates, stats, now):
+    def select(self, candidates, stats, now, blocked=_NONE_BLOCKED):
+        candidates = self.eligible(candidates, blocked)
         if not candidates:
             return None
         return min(candidates, key=lambda j: (j.arrival_time, j.job_id))
@@ -91,7 +108,8 @@ class FAIR(Policy):
     name = "fair"
     exclusive = False
 
-    def select(self, candidates, stats, now):
+    def select(self, candidates, stats, now, blocked=_NONE_BLOCKED):
+        candidates = self.eligible(candidates, blocked)
         if not candidates:
             return None
 

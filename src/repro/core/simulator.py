@@ -23,8 +23,16 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.lanes import Lane, LaneRegistry
+from repro.core.memory import MemoryConfig, MemoryManager
 from repro.core.scheduler import Policy
-from repro.core.types import IterationRecord, JobSpec, JobState, JobStats
+from repro.core.types import (
+    IterationRecord,
+    JobSpec,
+    JobState,
+    JobStats,
+    MemoryEvent,
+    MemoryEventKind,
+)
 
 
 @dataclass(order=True)
@@ -42,6 +50,8 @@ class SimResult:
     records: List[IterationRecord]
     makespan: float
     registry_stats: Dict
+    memory_events: List[MemoryEvent] = field(default_factory=list)
+    decision_log: List[tuple] = field(default_factory=list)
 
     # ------------------------------------------------------------------
     def _collect(self, fn):
@@ -67,6 +77,10 @@ class SimResult:
         v = self._collect(lambda s: s.queuing)
         return sum(v) / len(v) if v else 0.0
 
+    @property
+    def completed(self) -> int:
+        return sum(1 for s in self.stats.values() if s.finish_time is not None)
+
     def summary(self) -> Dict:
         return {
             "makespan": self.makespan,
@@ -74,7 +88,13 @@ class SimResult:
             "p95_jct": self.p95_jct,
             "avg_queuing": self.avg_queuing,
             "n_jobs": len(self.stats),
+            "completed": self.completed,
             "lane_moves": self.registry_stats.get("moves", 0),
+            "page_outs": self.registry_stats.get("page_outs", 0),
+            "page_ins": self.registry_stats.get("page_ins", 0),
+            "second_chance_admits": self.registry_stats.get("second_chance_admits", 0),
+            "rejected": self.registry_stats.get("rejected", 0),
+            "transfer_seconds": self.registry_stats.get("transfer_seconds", 0.0),
         }
 
 
@@ -84,18 +104,22 @@ class Simulator:
         capacity: int,
         policy: Policy,
         switch_overhead: float = 0.0,
+        memory: Optional[MemoryConfig] = None,
     ):
         self.registry = LaneRegistry(capacity)
+        self.memory = MemoryManager(self.registry, memory)
         self.policy = policy
         self.switch_overhead = switch_overhead
 
     def run(self, jobs: List[JobSpec], until: Optional[float] = None) -> SimResult:
-        reg, policy = self.registry, self.policy
+        reg, policy, mm = self.registry, self.policy, self.memory
         stats: Dict[int, JobStats] = {}
         state: Dict[int, JobState] = {}
         records: List[IterationRecord] = []
         running_iter: Dict[int, Tuple[JobSpec, float]] = {}  # lane_id -> (job, start)
         last_on_device: Dict[int, int] = {}  # lane_id -> job_id (switch detection)
+        transfer_delay: Dict[int, float] = {}  # job_id -> pending paging seconds
+        pending_out_cost = [0.0]  # page-out time owed by the next admission
         seq = itertools.count()
         events: List[_Event] = []
         now = 0.0
@@ -107,6 +131,9 @@ class Simulator:
 
         def active_utilization() -> float:
             return sum(j.utilization for j, _ in running_iter.values())
+
+        def busy() -> frozenset:
+            return frozenset(j.job_id for j, _ in running_iter.values())
 
         def candidates_in(lane: Lane) -> List[JobSpec]:
             return [
@@ -131,7 +158,8 @@ class Simulator:
             last_on_device[switch_key] = job.job_id
             # contention freeze at start (see module docstring)
             contention = max(1.0, active_utilization() + job.utilization)
-            dur = job.iter_time * contention + overhead
+            # paging transfers delay the affected job's next iteration
+            dur = job.iter_time * contention + overhead + transfer_delay.pop(job.job_id, 0.0)
             running_iter[lane.lane_id] = (job, now)
             heapq.heappush(events, _Event(now + dur, next(seq), "iter_done", job))
 
@@ -146,7 +174,7 @@ class Simulator:
                     for lane in reg.lanes.values()
                     for j in candidates_in(lane)
                 ]
-                job = policy.select(ready, stats, now)
+                job = policy.select(ready, stats, now, blocked=frozenset(reg.paged))
                 if job is not None:
                     lane = reg.assignment[job.job_id]
                     # mark preemption of jobs that were mid-stream and lost
@@ -160,7 +188,9 @@ class Simulator:
             for lane in list(reg.lanes.values()):
                 if lane.lane_id in running_iter:
                     continue
-                job = policy.select(candidates_in(lane), stats, now)
+                job = policy.select(
+                    candidates_in(lane), stats, now, blocked=frozenset(reg.paged)
+                )
                 if job is not None:
                     start_iteration(lane, job)
 
@@ -169,16 +199,38 @@ class Simulator:
             if st.admit_time is None:
                 st.admit_time = now
             state[job.job_id] = JobState.READY
+            # the admission waited on any page-outs that freed its bytes
+            if pending_out_cost[0]:
+                transfer_delay[job.job_id] = (
+                    transfer_delay.get(job.job_id, 0.0) + pending_out_cost[0]
+                )
+                pending_out_cost[0] = 0.0
 
-        reg.on_admit = on_admit
+        def on_mem_event(ev: MemoryEvent):
+            if ev.kind is MemoryEventKind.PAGE_OUT:
+                state[ev.job_id] = JobState.PAGED
+                stats[ev.job_id].page_outs += 1
+                stats[ev.job_id].transfer_time += ev.cost
+                pending_out_cost[0] += ev.cost
+            elif ev.kind is MemoryEventKind.PAGE_IN:
+                state[ev.job_id] = JobState.READY
+                stats[ev.job_id].page_ins += 1
+                stats[ev.job_id].transfer_time += ev.cost
+                transfer_delay[ev.job_id] = (
+                    transfer_delay.get(ev.job_id, 0.0) + ev.cost
+                )
+            elif ev.kind is MemoryEventKind.REJECT:
+                stats[ev.job_id].rejected = True
+                state[ev.job_id] = JobState.FINISHED
+            elif ev.kind is MemoryEventKind.SECOND_CHANCE:
+                stats[ev.job_id].second_chances = mm.chances.get(ev.job_id, 0)
 
-        while events:
-            ev = heapq.heappop(events)
-            now = ev.time
-            if until is not None and now > until:
-                break
+        mm.on_admit = on_admit
+        mm.on_event = on_mem_event
+
+        def handle(ev: _Event):
             if ev.kind == "arrival":
-                reg.job_arrive(ev.job)  # may admit instantly (on_admit fires)
+                mm.job_arrive(ev.job, now, busy())  # may admit (on_admit fires)
             elif ev.kind == "iter_done":
                 job = ev.job
                 lane = reg.assignment[job.job_id]
@@ -193,10 +245,37 @@ class Simulator:
                 if st.iterations_done >= job.n_iters:
                     state[job.job_id] = JobState.FINISHED
                     st.finish_time = now
-                    reg.job_finish(job)  # frees lane / admits queued jobs
+                    mm.job_finish(job, now, busy())  # frees lane / admits queued
                 else:
                     state[job.job_id] = JobState.READY
+                # second-chance tick: re-admit / page at the boundary
+                mm.iteration_boundary(now, busy())
+
+        while events:
+            ev = heapq.heappop(events)
+            now = ev.time
+            if until is not None and now > until:
+                break
+            handle(ev)
+            # drain every simultaneous event before scheduling: a batch of
+            # same-instant arrivals must all be visible to the policy before
+            # an iteration starts (the executor likewise submits a whole
+            # batch before its first scheduling decision)
+            while events and events[0].time == now:
+                handle(heapq.heappop(events))
             schedule()
 
+        # jobs still pending at the end never saw a SECOND_CHANCE admit;
+        # surface their failed re-admission rounds in the per-job record
+        for jid, st in stats.items():
+            st.second_chances = max(st.second_chances, mm.chances.get(jid, 0))
         makespan = max((s.finish_time or now) for s in stats.values()) if stats else 0.0
-        return SimResult(stats, {j.job_id: j for j in jobs}, records, makespan, reg.stats())
+        return SimResult(
+            stats,
+            {j.job_id: j for j in jobs},
+            records,
+            makespan,
+            mm.stats(),
+            memory_events=mm.events,
+            decision_log=mm.decision_log(),
+        )

@@ -70,7 +70,39 @@ class JobState(enum.Enum):
     READY = "ready"  # has a lane, waiting for scheduler
     RUNNING = "running"  # executing an iteration
     PAUSED = "paused"  # preempted at an iteration boundary
+    PAGED = "paged"  # admitted, but persistent region paged out to host
     FINISHED = "finished"
+
+
+class MemoryEventKind(enum.Enum):
+    """Admission-control / fungible-memory decisions (MemoryManager)."""
+
+    ADMIT = "admit"  # got a lane at arrival
+    QUEUE = "queue"  # denied at arrival, parked in the pending queue
+    SECOND_CHANCE = "second_chance"  # re-admitted from the pending queue
+    PAGE_OUT = "page_out"  # persistent region moved device -> host
+    PAGE_IN = "page_in"  # persistent region moved host -> device
+    REJECT = "reject"  # can never fit (P + E > C)
+    LANE_MOVED = "lane_moved"  # auto-defrag relocated a lane (zero-copy)
+
+
+@dataclass
+class MemoryEvent:
+    """One entry of the memory manager's decision log. ``cost`` is the
+    transfer time in seconds (modeled in the simulator, measured in the
+    executor); decision comparisons must ignore ``time`` and ``cost``."""
+
+    kind: MemoryEventKind
+    time: float
+    job_id: int
+    job: Optional["JobSpec"] = None
+    lane_id: Optional[int] = None
+    nbytes: int = 0
+    cost: float = 0.0
+
+    @property
+    def name(self) -> Optional[str]:
+        return self.job.name if self.job is not None else None
 
 
 @dataclass
@@ -82,6 +114,12 @@ class JobStats:
     iterations_done: int = 0
     service_time: float = 0.0  # accumulated wall-time of its iterations
     preemptions: int = 0
+    # fungible-memory accounting (MemoryManager):
+    page_outs: int = 0
+    page_ins: int = 0
+    transfer_time: float = 0.0  # seconds spent moving P across the host link
+    second_chances: int = 0  # failed re-admission rounds while pending
+    rejected: bool = False  # can never fit (P + E > C)
 
     @property
     def jct(self) -> Optional[float]:

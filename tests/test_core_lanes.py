@@ -130,3 +130,38 @@ def test_bad_profile_rejected():
     reg = LaneRegistry(GB)
     with pytest.raises(ValueError):
         reg.job_arrive(job(10, 0))
+
+
+def test_lane_shrinks_when_max_resident_departs_exact_fit():
+    """Regression: when the largest job leaves a shared lane, the lane must
+    shrink to its remaining residents' max E (part of auto-defrag). A job
+    whose ephemeral exactly equals the post-shrink free capacity must be
+    admitted, not queued. The slack is spread over TWO lanes so no single
+    FINDLANE resize can reclaim it — only shrink-on-departure does."""
+    reg = LaneRegistry(5400 * MB)
+    x, w = job(100, 1000, "x"), job(100, 3500, "w")
+    ra, rb = job(100, 800, "ra"), job(100, 2000, "rb")
+    assert reg.job_arrive(x) is not None
+    assert reg.job_arrive(w) is not None
+    # capacity is tight: the residents join the existing lanes
+    assert reg.job_arrive(ra) is reg.assignment[x.job_id]
+    assert reg.job_arrive(rb) is reg.assignment[w.job_id]
+    reg.job_finish(x)
+    reg.job_finish(w)
+    assert reg.lane_total == (800 + 2000) * MB, "lanes did not shrink to residents"
+    # free is now exactly 5400 - 200 (P) - 2800 (lanes) = 2400 MB
+    c = job(2300, 100, "c")
+    lane = reg.job_arrive(c)
+    assert lane is not None, "exact-fit job rejected: lanes not shrunk on departure"
+    assert not reg.queue
+    reg.check_invariants()
+
+
+def test_exact_fit_new_lane_admitted():
+    """E exactly equal to all remaining capacity must be admitted (<=, not <)."""
+    reg = LaneRegistry(8 * GB)
+    assert reg.job_arrive(job(100, 4000)) is not None
+    exact = (8 * 1024) - 100 - 4000 - 50  # persistent 50 + ephemeral = full
+    lane = reg.job_arrive(job(50, exact, "exact"))
+    assert lane is not None and lane.size == exact * MB
+    reg.check_invariants()

@@ -1,0 +1,245 @@
+"""Property-style tests of the fungible-memory subsystem's invariants.
+
+The crown property (paper §3.3): under ANY sequence of arrival / finish /
+page / defrag / second-chance events, the safety condition
+
+    sum_i P_i(on-device) + sum_j L_j <= C
+
+holds after every event, lanes stay contiguous and exactly sized to their
+residents, paging bookkeeping balances, and admission stays monotone.
+
+The core checker is plain code driven two ways: seeded ``random`` sequences
+(always run) and hypothesis strategies (gated like ``test_property.py`` —
+hypothesis is a CI dependency, not a runtime one).
+"""
+import random
+
+import pytest
+
+from repro.core import (
+    GB,
+    MB,
+    JobSpec,
+    LaneRegistry,
+    MemoryConfig,
+    MemoryEventKind,
+    MemoryProfile,
+    Simulator,
+    get_policy,
+)
+from repro.core.memory import MemoryManager
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def check_full_invariants(mm: MemoryManager, alive: list) -> None:
+    """Every invariant the subsystem promises, checked after one event."""
+    reg = mm.registry
+    reg.check_invariants()  # safety condition + contiguous layout
+    assigned = set(reg.assignment)
+    # paging bookkeeping balances: on-device P == sum of resident, unpaged P
+    expect_p = sum(
+        j.profile.persistent for j in alive
+        if j.job_id in assigned and j.job_id not in reg.paged
+    )
+    assert reg.persistent_used == expect_p
+    # paged jobs are always admitted jobs
+    assert set(reg.paged) <= assigned
+    # lanes are exactly sized to their residents (shrink-on-departure)
+    for lane in reg.lanes.values():
+        assert lane.jobs, "empty lane survived"
+        assert lane.size == max(j.profile.ephemeral for j in lane.jobs)
+    # queue and assignment are disjoint; rejected jobs are in neither
+    for j in reg.queue:
+        assert j.job_id not in assigned
+    assert not (mm.rejected & assigned)
+    assert all(j.job_id not in mm.rejected for j in reg.queue)
+
+
+def drive(ops, capacity_bytes, paging) -> MemoryManager:
+    """Apply an op sequence to a fresh manager, checking after every event."""
+    reg = LaneRegistry(capacity_bytes)
+    mm = MemoryManager(reg, MemoryConfig(paging=paging))
+    alive = []
+    now = 0.0
+    for op in ops:
+        now += 1.0
+        kind = op[0]
+        if kind == "arrive":
+            _, (p_mb, e_mb) = op
+            j = JobSpec(
+                f"j{len(alive)}",
+                MemoryProfile(p_mb * MB, e_mb * MB),
+                n_iters=1,
+                iter_time=0.1,
+            )
+            mm.job_arrive(j, now)
+            alive.append(j)
+        elif kind == "finish":
+            _, pick = op
+            if alive:
+                j = alive.pop(pick % len(alive))
+                admitted_before = set(reg.assignment)
+                mm.job_finish(j, now)
+                # monotone: a finish never evicts another admitted job
+                assert set(reg.assignment) >= admitted_before - {j.job_id}
+        elif kind == "boundary":
+            _, pick = op
+            admitted = sorted(reg.assignment)
+            # executor/simulator pass the set of mid-iteration jobs: model
+            # it as a pseudo-random subset of admitted, minus paged jobs
+            busy = frozenset(
+                jid for i, jid in enumerate(admitted)
+                if (pick >> (i % 16)) & 1 and jid not in reg.paged
+            )
+            mark = len(mm.events)
+            mm.iteration_boundary(now, busy)
+            # busy jobs' persistent regions are live: never paged out
+            for ev in mm.events[mark:]:
+                if ev.kind is MemoryEventKind.PAGE_OUT:
+                    assert ev.job_id not in busy
+        check_full_invariants(mm, alive)
+    return mm
+
+
+def gen_ops(rng: random.Random, n: int):
+    ops = []
+    for _ in range(n):
+        r = rng.random()
+        if r < 0.45:
+            ops.append(("arrive", (rng.randint(1, 900), rng.randint(1, 14000))))
+        elif r < 0.7:
+            ops.append(("finish", rng.randint(0, 1 << 16)))
+        else:
+            ops.append(("boundary", rng.randint(0, 1 << 16)))
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# Seeded-random drivers (always run)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(12))
+@pytest.mark.parametrize("paging", [False, True])
+def test_invariants_random_sequences(seed, paging):
+    rng = random.Random(seed)
+    capacity = rng.choice([2, 4, 8, 16]) * GB
+    drive(gen_ops(rng, 60), capacity, paging)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_second_chance_random_readmission(seed):
+    """Randomized arrive/boundary storms against a small device: pending
+    jobs accrue chances across boundaries; whenever everything else drains,
+    every feasible job must eventually be (re-)admitted."""
+    rng = random.Random(1000 + seed)
+    cap = 4 * GB
+    reg = LaneRegistry(cap)
+    mm = MemoryManager(reg, MemoryConfig(paging=bool(seed % 2)))
+    alive = []
+    now = 0.0
+    for step in range(80):
+        now += 1.0
+        r = rng.random()
+        if r < 0.4 and len(alive) < 12:
+            j = JobSpec(
+                f"s{step}",
+                MemoryProfile(rng.randint(1, 800) * MB, rng.randint(1, 3500) * MB),
+                n_iters=1,
+                iter_time=0.1,
+            )
+            mm.job_arrive(j, now)
+            alive.append(j)
+        elif r < 0.7 and alive:
+            j = alive.pop(rng.randrange(len(alive)))
+            mm.job_finish(j, now)
+        else:
+            mm.iteration_boundary(now)
+        check_full_invariants(mm, alive)
+    # drain to fixpoint: finishing admitted jobs re-admits pending ones,
+    # which must then be finishable too — until nothing is left
+    while True:
+        admitted_alive = [j for j in alive if j.job_id in reg.assignment]
+        if not admitted_alive:
+            break
+        for j in admitted_alive:
+            alive.remove(j)
+            mm.job_finish(j, now)
+            check_full_invariants(mm, alive)
+    mm.iteration_boundary(now + 1.0)
+    assert not reg.queue, "feasible pending jobs were never re-admitted"
+    assert all(j.job_id in mm.rejected for j in alive)
+
+
+@pytest.mark.parametrize("policy", ["fifo", "srtf", "pack", "fair"])
+def test_sim_paging_conservation(policy):
+    """Full simulator runs with paging on: every feasible job completes all
+    its iterations (the simulator checks the safety condition at every
+    registry event internally)."""
+    rng = random.Random(7)
+    jobs = []
+    for i in range(10):
+        jobs.append(
+            JobSpec(
+                f"p{i}",
+                MemoryProfile(
+                    rng.randint(100, 3000) * MB, rng.randint(500, 6000) * MB
+                ),
+                n_iters=rng.randint(1, 6),
+                iter_time=0.05 * rng.randint(1, 4),
+                utilization=1.0,
+                arrival_time=0.2 * i,
+            )
+        )
+    res = Simulator(
+        8 * GB, get_policy(policy), memory=MemoryConfig(paging=True)
+    ).run(list(jobs))
+    for j in jobs:
+        s = res.stats[j.job_id]
+        if s.rejected:
+            assert j.profile.total > 8 * GB
+        else:
+            assert s.iterations_done == j.n_iters, f"{j.name} starved"
+            assert s.finish_time is not None
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis drivers (CI)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    profiles = st.tuples(
+        st.integers(min_value=1, max_value=900),  # persistent MB
+        st.integers(min_value=1, max_value=14000),  # ephemeral MB
+    )
+    ops_strategy = st.lists(
+        st.one_of(
+            st.tuples(st.just("arrive"), profiles),
+            st.tuples(st.just("finish"), st.integers(min_value=0, max_value=1 << 16)),
+            st.tuples(st.just("boundary"), st.integers(min_value=0, max_value=1 << 16)),
+        ),
+        min_size=1,
+        max_size=50,
+    )
+
+    @settings(max_examples=150, deadline=None)
+    @given(
+        ops=ops_strategy,
+        capacity_gb=st.integers(min_value=2, max_value=16),
+        paging=st.booleans(),
+    )
+    def test_memory_manager_invariants_hypothesis(ops, capacity_gb, paging):
+        drive(ops, capacity_gb * GB, paging)
+
+else:  # pragma: no cover - mirrors test_property.py's gating
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_memory_manager_invariants_hypothesis():
+        pass
