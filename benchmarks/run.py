@@ -5,6 +5,7 @@
   fig11        bench_fair         3-way fair sharing throughput
   fig12        bench_hyperparam   PACK vs FIFO hyper-parameter makespan
   fig13        bench_inference    inference packing (42 models -> N devices)
+  fig9/10      bench_serve        priority-preemptive open-loop serving
   fig14/15     bench_overhead     live per-iteration overhead + 2-job sharing
   fig4/9       bench_switching    transfer-vs-latency + live switch latency
   fig1/5       bench_memory       persistent/ephemeral taxonomy (live)
@@ -24,6 +25,7 @@ def main() -> None:
         "benchmarks.bench_fair",
         "benchmarks.bench_hyperparam",
         "benchmarks.bench_inference",
+        "benchmarks.bench_serve",
         "benchmarks.bench_memory",
         "benchmarks.bench_switching",
         "benchmarks.bench_overhead",

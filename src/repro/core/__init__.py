@@ -2,16 +2,16 @@
 
 Public surface:
   * :class:`LaneRegistry` — GPU lanes, Algorithm 1, safety condition, defrag
-  * policies — FIFO / SRTF / PACK / FAIR (``get_policy``)
+  * policies — FIFO / SRTF / PACK / FAIR / PRIORITY (``get_policy``)
   * :class:`Simulator` — discrete-event trace evaluation
   * :class:`SalusExecutor` + :class:`VirtualDevice` — live execution service
-  * profiles / tracegen — workload tables + trace generation
+  * profiles / tracegen — workload tables + trace/request-stream generation
 """
 from repro.core.adaptor import VirtualDevice
 from repro.core.executor import SalusExecutor
 from repro.core.lanes import Lane, LaneRegistry, SafetyViolation
 from repro.core.memory import MemoryConfig, MemoryManager
-from repro.core.scheduler import FAIR, FIFO, PACK, SRTF, Policy, get_policy
+from repro.core.scheduler import FAIR, FIFO, PACK, PRIORITY, SRTF, Policy, get_policy
 from repro.core.simulator import SimResult, Simulator
 from repro.core.types import (
     GB,
@@ -22,10 +22,13 @@ from repro.core.types import (
     MemoryEvent,
     MemoryEventKind,
     MemoryProfile,
+    percentile,
 )
 
 __all__ = [
     "VirtualDevice",
+    "PRIORITY",
+    "percentile",
     "SalusExecutor",
     "MemoryConfig",
     "MemoryManager",

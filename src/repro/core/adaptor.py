@@ -36,7 +36,17 @@ class VirtualDevice:
         profile: Optional[MemoryProfile] = None,
         utilization: float = 1.0,
         kind: str = "train",
+        iter_time: float = 0.01,
+        arrival_time: float = 0.0,
+        priority: Optional[int] = None,
+        request_times: Optional[tuple] = None,
     ) -> Session:
+        """Register one job. ``iter_time``/``arrival_time`` are forwarded to
+        the :class:`Session` verbatim — FAIR's service-rate computation and
+        ``accounting="nominal"`` both read them off the JobSpec, so dropping
+        them here would silently corrupt live scheduling decisions.
+        ``request_times`` makes the session an open-loop inference service:
+        iteration k serves the request arriving at ``request_times[k]``."""
         jitted = jax.jit(step_fn) if not hasattr(step_fn, "lower") else step_fn
         if profile is None:
             compiled = jitted.lower(init_state, data_fn(0)).compile()
@@ -50,6 +60,10 @@ class VirtualDevice:
             profile=profile,
             kind=kind,
             utilization=utilization,
+            iter_time=iter_time,
+            arrival_time=arrival_time,
+            priority=priority,
+            request_times=request_times,
         )
         self._sessions.append(sess)
         self.executor.submit(sess)

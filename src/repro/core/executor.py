@@ -60,6 +60,7 @@ class ExecutorReport:
     transfer_latencies: List[float] = field(default_factory=list)
     memory_events: List[MemoryEvent] = field(default_factory=list)
     decision_log: List[tuple] = field(default_factory=list)
+    failures: Dict[int, str] = field(default_factory=dict)  # job_id -> error
 
     @property
     def avg_jct(self) -> float:
@@ -89,8 +90,18 @@ class SalusExecutor:
         self.records: List[IterationRecord] = []
         self.switch_latencies: List[float] = []
         self.transfer_latencies: List[float] = []
+        self.failures: Dict[int, str] = {}  # job_id -> "ExcType: message"
         self._last_job_on: Dict[int, int] = {}
         self._t0: Optional[float] = None
+        # Nominal virtual clock: replicates the simulator's time semantics
+        # (declared iteration times + modeled transfer charging + jumps to
+        # the next open-loop request arrival) so request gating under
+        # accounting="nominal" is a pure function of the trace — the
+        # property the differential suite compares against virtual time.
+        self._vnow = 0.0
+        self._vtransfer: Dict[int, float] = {}  # job_id -> pending modeled delay
+        self._vpending_out = 0.0  # modeled page-out time owed by next admission
+        self._wall_base: Optional[float] = None  # wall clock at run() entry
 
     # ------------------------------------------------------------------
 
@@ -98,6 +109,15 @@ class SalusExecutor:
         if self._t0 is None:
             self._t0 = time.perf_counter()
         return time.perf_counter() - self._t0
+
+    def _clock(self) -> float:
+        """The clock open-loop request gating runs against: virtual under
+        nominal accounting (mirrors the simulator), wall otherwise. Wall
+        time is measured from run() entry, not first submit — session
+        creation (jit compiles) must not eat into the request window."""
+        if self.accounting == "nominal":
+            return self._vnow
+        return self.now() - (self._wall_base or 0.0)
 
     def submit(self, session: Session) -> None:
         """(1a) create session + (1b) request a lane (may queue)."""
@@ -127,21 +147,37 @@ class SalusExecutor:
         self.transfer_latencies.append(dt)
         return dt
 
+    def _modeled_cost(self, job: JobSpec) -> float:
+        """The simulator's transfer model (P / page_bandwidth), tracked in
+        parallel with the real pager so the nominal clock charges the exact
+        delays the simulator's virtual clock does."""
+        return job.profile.persistent / self.memory.config.page_bandwidth
+
     def _on_admit(self, job: JobSpec, lane: Lane) -> None:
         st = self.stats[job.job_id]
         if st.admit_time is None:
             st.admit_time = self.now()
         self.state[job.job_id] = JobState.READY
+        # the admission waited on any page-outs that freed its bytes
+        if self._vpending_out:
+            self._vtransfer[job.job_id] = (
+                self._vtransfer.get(job.job_id, 0.0) + self._vpending_out
+            )
+            self._vpending_out = 0.0
 
     def _on_mem_event(self, ev: MemoryEvent) -> None:
         if ev.kind is MemoryEventKind.PAGE_OUT:
             self.state[ev.job_id] = JobState.PAGED
             self.stats[ev.job_id].page_outs += 1
             self.stats[ev.job_id].transfer_time += ev.cost
+            self._vpending_out += self._modeled_cost(ev.job)
         elif ev.kind is MemoryEventKind.PAGE_IN:
             self.state[ev.job_id] = JobState.READY
             self.stats[ev.job_id].page_ins += 1
             self.stats[ev.job_id].transfer_time += ev.cost
+            self._vtransfer[ev.job_id] = (
+                self._vtransfer.get(ev.job_id, 0.0) + self._modeled_cost(ev.job)
+            )
         elif ev.kind is MemoryEventKind.REJECT:
             self.stats[ev.job_id].rejected = True
             self.state[ev.job_id] = JobState.FINISHED
@@ -153,10 +189,12 @@ class SalusExecutor:
     # ------------------------------------------------------------------
 
     def _candidates(self, lane: Lane) -> List[JobSpec]:
+        clock = self._clock()
         return [
             j
             for j in lane.jobs
             if self.state[j.job_id] in (JobState.READY, JobState.PAUSED)
+            and j.request_pending(self.stats[j.job_id].iterations_done, clock)
         ]
 
     def _run_one(self, lane: Lane, job: JobSpec) -> None:
@@ -176,41 +214,89 @@ class SalusExecutor:
             # (contrast: bench_switching computes the Gandiva-style transfer
             # lower bound for the same jobs).
             self.switch_latencies.append(time.perf_counter() - t_enter)
-        dur = sess.run_iteration(st.iterations_done)
+        try:
+            dur = sess.run_iteration(st.iterations_done)
+        except Exception as exc:  # noqa: BLE001 — any step_fn/data_fn error
+            # A failing session must not abort the run with its lane still
+            # allocated: mark it terminally failed, free the lane through
+            # the memory manager (queued jobs get their admission retry),
+            # and surface the error in the report.
+            self.state[job.job_id] = JobState.FAILED
+            st.failed = True
+            self.failures[job.job_id] = f"{type(exc).__name__}: {exc}"
+            self.memory.job_finish(job, self._clock())
+            return
         end = self.now()
         st.iterations_done += 1
-        st.service_time += dur if self.accounting == "wall" else job.iter_time
+        if self.accounting == "wall":
+            st.service_time += dur
+        else:
+            st.service_time += job.iter_time
+            # virtual clock: declared duration + any modeled paging delay
+            # charged to this job (mirrors the simulator's start_iteration)
+            self._vnow += job.iter_time + self._vtransfer.pop(job.job_id, 0.0)
+        st.last_run_end = self._clock()
+        if job.request_times is not None:
+            st.request_latencies.append(
+                self._clock() - job.request_times[st.iterations_done - 1]
+            )
         self.records.append(
             IterationRecord(job.job_id, st.iterations_done - 1, end - dur, end, lane.lane_id)
         )
         if sess.finished:
             self.state[job.job_id] = JobState.FINISHED
             st.finish_time = end
-            self.memory.job_finish(job, end)
+            self.memory.job_finish(job, self._clock())
         else:
             self.state[job.job_id] = JobState.READY
         # second-chance tick: between iterations the ephemeral region is
         # empty, so pending jobs may be re-admitted and P pages may move
-        self.memory.iteration_boundary(self.now())
+        # (memory-event stamps use the same clock request gating does)
+        self.memory.iteration_boundary(self._clock())
 
     def _done(self) -> bool:
         return all(
-            s is JobState.FINISHED or self.sessions[j].finished
+            s in (JobState.FINISHED, JobState.FAILED) or self.sessions[j].finished
             for j, s in self.state.items()
         )
 
+    def _next_request_time(self) -> Optional[float]:
+        """Earliest future open-loop request arrival among live jobs, or
+        None. Used when the device idles: the nominal clock jumps there
+        (the simulator pops the matching request event), the wall clock
+        sleeps until it."""
+        clock = self._clock()
+        best = None
+        for jid, s in self.state.items():
+            if s in (JobState.FINISHED, JobState.FAILED):
+                continue
+            nxt = self.sessions[jid].job.next_request_time(
+                self.stats[jid].iterations_done
+            )
+            if nxt is not None and nxt > clock and (best is None or nxt < best):
+                best = nxt
+        return best
+
     def run(self, max_wall: Optional[float] = None) -> ExecutorReport:
         """Drive all submitted sessions to completion."""
+        if self._wall_base is None:
+            self._wall_base = self.now()
         blocked = lambda: frozenset(self.registry.paged)
         while True:
-            if max_wall is not None and self.now() > max_wall:
+            # max_wall is measured from run() entry: session creation (jit
+            # compiles after the first submit) must not consume the budget
+            if max_wall is not None and self.now() - self._wall_base > max_wall:
                 break
             progressed = False
             if self.policy.exclusive:
                 ready = [
                     j for lane in self.registry.lanes.values() for j in self._candidates(lane)
                 ]
-                job = self.policy.select(ready, self.stats, self.now(), blocked=blocked())
+                # decisions run on _clock() so FAIR rates and PRIORITY aging
+                # compare trace-relative arrival/last-run times against a
+                # clock in the same domain (virtual under nominal, wall from
+                # run() entry otherwise)
+                job = self.policy.select(ready, self.stats, self._clock(), blocked=blocked())
                 if job is not None:
                     for other in ready:
                         if other is not job and self.stats[other.job_id].iterations_done:
@@ -225,7 +311,7 @@ class SalusExecutor:
                     if lane.lane_id not in self.registry.lanes:
                         continue  # lane deleted by a finish earlier this sweep
                     job = self.policy.select(
-                        self._candidates(lane), self.stats, self.now(), blocked=blocked()
+                        self._candidates(lane), self.stats, self._clock(), blocked=blocked()
                     )
                     if job is not None:
                         self._run_one(lane, job)
@@ -234,7 +320,19 @@ class SalusExecutor:
                 if self._done():
                     break
                 # one more boundary tick: paging / second chance may unblock
-                if self.memory.iteration_boundary(self.now()):
+                # (the simulator runs the identical tick loop whenever its
+                # device goes idle with queued/paged jobs)
+                if self.memory.iteration_boundary(self._clock()):
+                    continue
+                # open-loop gap: nothing runnable until the next request
+                # arrives — jump the virtual clock (nominal) or really wait
+                # for it (wall), then rescan
+                nxt = self._next_request_time()
+                if nxt is not None:
+                    if self.accounting == "nominal":
+                        self._vnow = nxt
+                    else:
+                        time.sleep(max(0.0, nxt - self._clock()))
                     continue
                 if self.registry.queue or self.registry.paged:
                     # pending jobs that can never fit => deadlock guard
@@ -255,4 +353,5 @@ class SalusExecutor:
             transfer_latencies=self.transfer_latencies,
             memory_events=self.memory.events,
             decision_log=self.memory.decision_log(),
+            failures=dict(self.failures),
         )

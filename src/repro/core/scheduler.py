@@ -1,4 +1,4 @@
-"""Iteration schedulers (paper §4): FIFO, SRTF, PACK, FAIR.
+"""Iteration schedulers (paper §4): FIFO, SRTF, PACK, FAIR, PRIORITY.
 
 A policy answers one question at every iteration boundary: *which job runs
 its next iteration?* Policies are shared verbatim by the discrete-event
@@ -6,7 +6,8 @@ simulator and the live executor.
 
 Two execution regimes (paper §5.1):
   * ``exclusive``  — at most one iteration in flight device-wide (FIFO's
-    no-sharing baseline; SRTF's single-lane preemption study),
+    no-sharing baseline; SRTF's single-lane preemption study; PRIORITY's
+    preempt-at-the-boundary serving regime),
   * concurrent     — one iteration in flight *per lane* (PACK/FAIR), i.e.
     serialization within a lane, parallelism across lanes.
 """
@@ -123,7 +124,58 @@ class FAIR(Policy):
         return min(candidates, key=lambda j: (rate(j), j.arrival_time, j.job_id))
 
 
-POLICIES = {p.name: p for p in (FIFO(), SRTF(), PACK(), FAIR())}
+class PRIORITY(Policy):
+    """Strict priority with a FAIR tie-break inside each class (paper §5.3,
+    Fig. 9/10): latency-critical inference services preempt best-effort
+    training at the next iteration boundary — never mid-iteration, which
+    the exclusive regime guarantees structurally — and within a class the
+    service *rate since arrival* is equalized, so co-resident inference
+    services share fairly while a lone background training job soaks up
+    every idle slot (open-loop inference is only a candidate while it has
+    a pending request).
+
+    ``aging`` bounds starvation of the low class: a job that has waited
+    longer than ``aging`` seconds since its last iteration (or arrival) is
+    promoted to the top class for that one decision. ``None`` (default)
+    is pure strict priority — required for the simulator<->executor
+    differential, where decisions must not depend on wall-clock waits.
+    """
+
+    name = "priority"
+    exclusive = True
+
+    def __init__(self, aging: Optional[float] = None):
+        if aging is not None and aging <= 0:
+            raise ValueError(f"aging must be positive seconds, got {aging}")
+        self.aging = aging
+
+    def select(self, candidates, stats, now, blocked=_NONE_BLOCKED):
+        candidates = self.eligible(candidates, blocked)
+        if not candidates:
+            return None
+        top = max(j.effective_priority for j in candidates)
+
+        def klass(j: JobSpec) -> int:
+            if self.aging is not None and j.effective_priority < top:
+                st = stats.get(j.job_id)
+                last = st.last_run_end if st and st.last_run_end is not None else j.arrival_time
+                if now - last >= self.aging:
+                    return top  # aged: one boosted decision, then demoted
+            return j.effective_priority
+
+        def rate(j: JobSpec) -> float:
+            st = stats.get(j.job_id)
+            if st is None:
+                return 0.0
+            elapsed = max(now - j.arrival_time, 1e-9)
+            return st.service_time / elapsed
+
+        return min(
+            candidates, key=lambda j: (-klass(j), rate(j), j.arrival_time, j.job_id)
+        )
+
+
+POLICIES = {p.name: p for p in (FIFO(), SRTF(), PACK(), FAIR(), PRIORITY())}
 
 
 def get_policy(name: str) -> Policy:

@@ -31,6 +31,8 @@ class Session:
         utilization: float = 1.0,
         arrival_time: float = 0.0,
         kind: str = "train",
+        priority: Optional[int] = None,
+        request_times: Optional[tuple] = None,  # open-loop request stream
     ):
         self.name = name
         self.step_fn = step_fn
@@ -47,6 +49,8 @@ class Session:
             utilization=utilization,
             arrival_time=arrival_time,
             kind=kind,
+            priority=priority,
+            request_times=request_times,
             run_iteration=self.run_iteration,
         )
 

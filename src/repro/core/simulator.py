@@ -39,7 +39,7 @@ from repro.core.types import (
 class _Event:
     time: float
     seq: int
-    kind: str = field(compare=False)  # arrival | iter_done
+    kind: str = field(compare=False)  # arrival | iter_done | request
     job: JobSpec = field(compare=False)
 
 
@@ -80,6 +80,14 @@ class SimResult:
     @property
     def completed(self) -> int:
         return sum(1 for s in self.stats.values() if s.finish_time is not None)
+
+    @property
+    def request_latencies(self) -> List[float]:
+        """All open-loop request latencies across jobs (queueing + service)."""
+        out: List[float] = []
+        for s in self.stats.values():
+            out.extend(s.request_latencies)
+        return out
 
     def summary(self) -> Dict:
         return {
@@ -128,6 +136,15 @@ class Simulator:
             stats[job.job_id] = JobStats(arrival_time=job.arrival_time)
             state[job.job_id] = JobState.QUEUED
             heapq.heappush(events, _Event(job.arrival_time, next(seq), "arrival", job))
+            if job.request_times:
+                # open-loop services: each request arrival is an event that
+                # wakes the scheduler (requests queue; they are not
+                # always-ready iterations)
+                for rt in job.request_times:
+                    heapq.heappush(
+                        events,
+                        _Event(max(rt, job.arrival_time), next(seq), "request", job),
+                    )
 
         def active_utilization() -> float:
             return sum(j.utilization for j, _ in running_iter.values())
@@ -140,6 +157,7 @@ class Simulator:
                 j
                 for j in lane.jobs
                 if state[j.job_id] in (JobState.READY, JobState.PAUSED)
+                and j.request_pending(stats[j.job_id].iterations_done, now)
             ]
 
         def start_iteration(lane: Lane, job: JobSpec):
@@ -228,9 +246,21 @@ class Simulator:
         mm.on_admit = on_admit
         mm.on_event = on_mem_event
 
-        def handle(ev: _Event):
+        def handle(ev: _Event) -> bool:
+            """Process one event. Returns False for *stale* request events —
+            wake-ups that cannot change runnability (the service is finished,
+            or backlogged so its head request already arrived). Stale events
+            must not trigger idle boundary ticks below: the executor only
+            visits head-of-queue request instants (``_next_request_time``),
+            and tick counts feed deficit/chances accounting, so an extra
+            tick here would fork the two engines' decision sequences."""
             if ev.kind == "arrival":
                 mm.job_arrive(ev.job, now, busy())  # may admit (on_admit fires)
+            elif ev.kind == "request":
+                if state[ev.job.job_id] is JobState.FINISHED:
+                    return False
+                nxt = ev.job.next_request_time(stats[ev.job.job_id].iterations_done)
+                return nxt is not None and max(nxt, ev.job.arrival_time) == ev.time
             elif ev.kind == "iter_done":
                 job = ev.job
                 lane = reg.assignment[job.job_id]
@@ -239,6 +269,13 @@ class Simulator:
                 st = stats[job.job_id]
                 st.iterations_done += 1
                 st.service_time += now - start
+                st.last_run_end = now
+                if job.request_times is not None:
+                    # request latency = completion - request arrival
+                    # (queueing + service, the Fig. 9/10 SLO metric)
+                    st.request_latencies.append(
+                        now - job.request_times[st.iterations_done - 1]
+                    )
                 records.append(
                     IterationRecord(job.job_id, st.iterations_done - 1, start, now, lane.lane_id)
                 )
@@ -250,20 +287,34 @@ class Simulator:
                     state[job.job_id] = JobState.READY
                 # second-chance tick: re-admit / page at the boundary
                 mm.iteration_boundary(now, busy())
+            return True
 
         while events:
             ev = heapq.heappop(events)
             now = ev.time
             if until is not None and now > until:
                 break
-            handle(ev)
+            live = handle(ev)
             # drain every simultaneous event before scheduling: a batch of
             # same-instant arrivals must all be visible to the policy before
             # an iteration starts (the executor likewise submits a whole
             # batch before its first scheduling decision)
             while events and events[0].time == now:
-                handle(heapq.heappop(events))
+                live = handle(heapq.heappop(events)) or live
             schedule()
+            # idle boundary ticks: if nothing is in flight the ephemeral
+            # region is empty device-wide, so admission/paging may proceed
+            # right now instead of waiting for an iteration to end (open-loop
+            # gaps would otherwise strand queued/paged jobs). The executor's
+            # idle branch runs the exact same tick-until-quiescent loop.
+            # Skipped at stale-request instants the executor never visits.
+            while (
+                live
+                and not running_iter
+                and (reg.queue or reg.paged)
+                and mm.iteration_boundary(now, busy())
+            ):
+                schedule()
 
         # jobs still pending at the end never saw a SECOND_CHANCE admit;
         # surface their failed re-admission rounds in the per-job record

@@ -11,8 +11,19 @@ import math
 import random
 from typing import List, Optional
 
-from repro.core.profiles import PAPER_WORKLOADS, paper_job
+from repro.core.profiles import PAPER_WORKLOADS, inference_profile, paper_job
 from repro.core.types import JobSpec
+
+# Low-utilization models dominate packed serving (paper §5.3): these are the
+# default service pool for open-loop request traces.
+SERVING_POOL = (
+    "vae_64",
+    "superres_32",
+    "vae_128",
+    "superres_64",
+    "vae_256",
+    "superres_128",
+)
 
 
 def generate_trace(
@@ -41,6 +52,77 @@ def generate_trace(
         iter_time = PAPER_WORKLOADS[name][2]
         n_iters = max(5, int(duration / iter_time))
         jobs.append(paper_job(name, n_iters=n_iters, arrival_time=t))
+    return jobs
+
+
+def poisson_arrivals(rps: float, duration: float, rng: random.Random) -> List[float]:
+    """Poisson arrival times over [0, duration); an idle stream still gets
+    one probe request. Shared by ``request_trace`` and the live serve
+    driver so both generate identical streams from the same rng."""
+    times: List[float] = []
+    t = rng.expovariate(rps)
+    while t < duration:
+        times.append(t)
+        t += rng.expovariate(rps)
+    if not times:
+        times.append(rng.uniform(0.0, duration))
+    return times
+
+
+def request_trace(
+    n_services: int = 3,
+    seed: int = 0,
+    rps: float = 2.0,
+    duration: float = 30.0,
+    names: Optional[List[str]] = None,
+    train_background: Optional[str] = None,
+    train_iters: Optional[int] = None,
+    iter_time_scale: float = 1.0,
+) -> List[JobSpec]:
+    """Open-loop serving trace (paper §5.3, Fig. 9/10): ``n_services``
+    inference services, each receiving a Poisson request stream of rate
+    ``rps`` over ``[0, duration)``, optionally co-located with one
+    best-effort background training job that PRIORITY preempts at iteration
+    boundaries. An inference job's "iterations" are its requests: they
+    queue until their arrival time passes instead of being always ready.
+
+    Deterministic in the seed. Services round-robin over ``names`` (default
+    ``SERVING_POOL``) so a small pool still yields distinct co-residents;
+    per-request service time and the inference memory profile come from
+    ``profiles.inference_profile``. ``iter_time_scale`` time-dilates the
+    whole trace — iteration times AND request arrivals — so a ms-scale
+    replica keeps the same load factor (the differential suite runs those
+    live). ``train_iters`` bounds the background job (default: enough
+    iterations to span the window).
+    """
+    rng = random.Random(seed)
+    pool = list(names or SERVING_POOL)
+    jobs: List[JobSpec] = []
+    for i in range(n_services):
+        name = pool[i % len(pool)]
+        prof, req_time = inference_profile(name)
+        times = poisson_arrivals(rps, duration, rng)
+        _, _, _, u = PAPER_WORKLOADS[name]
+        jobs.append(
+            JobSpec(
+                name=f"svc{i}:{name}",
+                profile=prof,
+                n_iters=len(times),
+                iter_time=round(req_time * iter_time_scale, 9),
+                utilization=max(0.05, u * 0.25),
+                arrival_time=0.0,
+                kind="inference",
+                request_times=tuple(round(x * iter_time_scale, 9) for x in times),
+            )
+        )
+    if train_background is not None:
+        p, e, t, u = PAPER_WORKLOADS[train_background]
+        iter_time = t * iter_time_scale
+        n_iters = train_iters or max(5, int(math.ceil(duration / iter_time)))
+        job = paper_job(train_background, n_iters=n_iters, arrival_time=0.0)
+        job.iter_time = round(iter_time, 9)
+        job.name = f"train:{train_background}"
+        jobs.append(job)
     return jobs
 
 

@@ -12,10 +12,22 @@ from __future__ import annotations
 import enum
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 MB = 1024 * 1024
 GB = 1024 * MB
+
+
+def percentile(values: List[float], q: float) -> Optional[float]:
+    """Nearest-rank percentile (q in [0, 1]) of an unsorted sample; None on
+    an empty sample. Shared by JobStats and the serving benchmarks so both
+    report identical tail figures."""
+    if not values:
+        return None
+    if not (0.0 <= q <= 1.0):
+        raise ValueError(f"q must be in [0, 1], got {q}")
+    v = sorted(values)
+    return v[int(round(q * (len(v) - 1)))]
 
 
 @dataclass(frozen=True)
@@ -34,7 +46,19 @@ class MemoryProfile:
 class JobSpec:
     """One DL job submitted to Salus (a training run or an inference
     service). Iteration-granularity: the job is ``n_iters`` iterations of
-    ``iter_time`` seconds each when running alone."""
+    ``iter_time`` seconds each when running alone.
+
+    Closed vs open loop: by default every iteration is always ready (a
+    training run). When ``request_times`` is set the job is an *open-loop
+    inference service*: iteration k is a request that only becomes runnable
+    once ``request_times[k]`` has passed — requests queue, and the engines
+    record per-request queueing+service latency into ``JobStats``.
+
+    ``priority`` is the strict-priority class for the PRIORITY policy
+    (higher wins). ``None`` defers to the kind default: inference is the
+    latency-critical class (1), training best-effort (0), matching the
+    paper's §5.3 co-location regime.
+    """
 
     name: str
     profile: MemoryProfile
@@ -43,6 +67,8 @@ class JobSpec:
     utilization: float = 1.0  # fraction of device compute used when solo
     arrival_time: float = 0.0
     kind: str = "train"  # train | inference
+    priority: Optional[int] = None  # strict-priority class; None -> kind default
+    request_times: Optional[Tuple[float, ...]] = None  # open-loop arrivals
     # Optional live-execution payload (set by the adaptor):
     run_iteration: Optional[Callable[[int], Any]] = None
     meta: Dict[str, Any] = field(default_factory=dict)
@@ -53,6 +79,43 @@ class JobSpec:
         self.job_id = next(JobSpec._ids)
         if not (0.0 < self.utilization <= 1.0):
             raise ValueError(f"utilization must be in (0, 1], got {self.utilization}")
+        if self.request_times is not None:
+            self.request_times = tuple(float(t) for t in self.request_times)
+            if len(self.request_times) != self.n_iters:
+                raise ValueError(
+                    f"request_times has {len(self.request_times)} entries "
+                    f"for n_iters={self.n_iters}"
+                )
+            if any(b < a for a, b in zip(self.request_times, self.request_times[1:])):
+                raise ValueError("request_times must be non-decreasing")
+
+    @property
+    def effective_priority(self) -> int:
+        """Strict-priority class: explicit ``priority`` wins, else the kind
+        default (inference high, training low)."""
+        if self.priority is not None:
+            return self.priority
+        return 1 if self.kind == "inference" else 0
+
+    @property
+    def open_loop(self) -> bool:
+        return self.request_times is not None
+
+    def next_request_time(self, done: int) -> Optional[float]:
+        """Arrival time of request ``done`` (the next one to serve), or None
+        for closed-loop jobs / exhausted request streams."""
+        if self.request_times is None or done >= len(self.request_times):
+            return None
+        return self.request_times[done]
+
+    def request_pending(self, done: int, now: float) -> bool:
+        """Is iteration ``done`` runnable at ``now``? Closed-loop jobs are
+        always ready; open-loop jobs only once the request has arrived.
+        This single gate is shared by the simulator and the executor — the
+        request-arrival machinery must not fork between engines."""
+        if self.request_times is None:
+            return True
+        return done < len(self.request_times) and self.request_times[done] <= now
 
     @property
     def total_work(self) -> float:
@@ -72,6 +135,7 @@ class JobState(enum.Enum):
     PAUSED = "paused"  # preempted at an iteration boundary
     PAGED = "paged"  # admitted, but persistent region paged out to host
     FINISHED = "finished"
+    FAILED = "failed"  # step_fn raised; terminal, lane freed
 
 
 class MemoryEventKind(enum.Enum):
@@ -120,6 +184,11 @@ class JobStats:
     transfer_time: float = 0.0  # seconds spent moving P across the host link
     second_chances: int = 0  # failed re-admission rounds while pending
     rejected: bool = False  # can never fit (P + E > C)
+    failed: bool = False  # step_fn raised in the live executor
+    last_run_end: Optional[float] = None  # end of the most recent iteration
+    # open-loop serving accounting: one entry per completed request =
+    # (completion - request arrival), i.e. queueing + service time
+    request_latencies: List[float] = field(default_factory=list)
 
     @property
     def jct(self) -> Optional[float]:
@@ -132,6 +201,23 @@ class JobStats:
         if self.first_run_time is None:
             return None
         return self.first_run_time - self.arrival_time
+
+    # -- open-loop latency helpers (nearest-rank percentiles) -----------
+
+    def latency_percentile(self, q: float) -> Optional[float]:
+        return percentile(self.request_latencies, q)
+
+    @property
+    def p50_latency(self) -> Optional[float]:
+        return self.latency_percentile(0.50)
+
+    @property
+    def p95_latency(self) -> Optional[float]:
+        return self.latency_percentile(0.95)
+
+    @property
+    def p99_latency(self) -> Optional[float]:
+        return self.latency_percentile(0.99)
 
 
 @dataclass

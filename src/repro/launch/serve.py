@@ -1,31 +1,47 @@
-"""Salus-packed serving driver: hold several models resident on one device,
-schedule batched requests at iteration granularity (paper §5.3 live).
+"""Open-loop Salus serving driver (paper §5.3, Fig. 9/10): hold several
+inference services resident on one device, feed each a Poisson request
+stream, and optionally co-locate one best-effort background training job
+that the PRIORITY policy preempts at iteration boundaries — never
+mid-iteration. Reports per-service p50/p95/p99 request latency and the
+background job's residual throughput.
 
     PYTHONPATH=src python -m repro.launch.serve --archs gemma-2b,qwen3-8b \\
-        --smoke --requests 20
+        --rps 2 --duration 10 --train-background gemma-2b
+
+``--no-smoke`` runs the full-size configs (smoke-scale is the default).
 """
 from __future__ import annotations
 
 import argparse
+import random
 import time
+import zlib
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import GB, MB, MemoryProfile, SalusExecutor, VirtualDevice, get_policy
-from repro.core.profiles import profile_executable
+from repro.core import GB, SalusExecutor, VirtualDevice, get_policy
+from repro.core.tracegen import poisson_arrivals
 from repro.models import ModelOptions, build_model
+
+_MODEL_OPTS = ModelOptions(loss_chunk=8, moe_group=16, wkv_chunk=8, ssm_chunk=8)
+
+
+def stable_seed(name: str) -> int:
+    """Deterministic per-service PRNG seed. ``hash(str)`` is salted per
+    process (PYTHONHASHSEED), which made serve runs irreproducible; crc32
+    is a stable digest."""
+    return zlib.crc32(name.encode("utf-8")) % 2**31
 
 
 def make_service(name: str, smoke: bool, max_len: int = 64):
+    """One resident inference service: params + a jitted prefill handler."""
     cfg = get_config(name)
     if smoke:
         cfg = cfg.smoke()
-    model = build_model(
-        cfg, ModelOptions(loss_chunk=8, moe_group=16, wkv_chunk=8, ssm_chunk=8)
-    )
-    params = model.init(jax.random.PRNGKey(hash(name) % 2**31))
+    model = build_model(cfg, _MODEL_OPTS)
+    params = model.init(jax.random.PRNGKey(stable_seed(name)))
 
     prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=max_len))
 
@@ -41,35 +57,107 @@ def make_service(name: str, smoke: bool, max_len: int = 64):
     return handle, params, data_fn
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--archs", default="gemma-2b,qwen3-8b,rwkv6-7b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=20)
-    ap.add_argument("--capacity-gb", type=float, default=8.0)
-    args = ap.parse_args(argv)
+def make_trainer(name: str, smoke: bool):
+    """The best-effort background training job of the Fig. 9/10 regime:
+    a real gradient step so preemption interrupts genuine device work."""
+    cfg = get_config(name)
+    if smoke:
+        cfg = cfg.smoke()
+    model = build_model(cfg, _MODEL_OPTS)
+    params = model.init(jax.random.PRNGKey(stable_seed(name) ^ 0x5A105))
 
-    ex = SalusExecutor(capacity=int(args.capacity_gb * GB), policy=get_policy("pack"))
+    def step(params, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params = jax.tree_util.tree_map(lambda p, g: p - 1e-4 * g, params, grads)
+        return params, {"loss": loss}
+
+    def data_fn(i):
+        rng = jax.random.PRNGKey(i)
+        tokens = jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)
+        return {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=-1)}
+
+    return step, params, data_fn
+
+
+def poisson_requests(rps: float, duration: float, rng: random.Random):
+    """Per-service request stream (shared generator, ms-precision times)."""
+    return tuple(round(t, 6) for t in poisson_arrivals(rps, duration, rng))
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--archs", default="gemma-2b,qwen3-8b,rwkv6-7b")
+    # BooleanOptionalAction so --no-smoke actually reaches full-size mode
+    # (a store_true with default=True made it unreachable)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction, default=True)
+    ap.add_argument("--rps", type=float, default=2.0, help="requests/s per service")
+    ap.add_argument("--duration", type=float, default=10.0, help="open-loop window (s)")
+    ap.add_argument(
+        "--requests", type=int, default=None,
+        help="cap on requests per service (default: whatever the stream yields)",
+    )
+    ap.add_argument(
+        "--train-background", default=None, metavar="ARCH",
+        help="co-locate one best-effort training job of this arch",
+    )
+    ap.add_argument("--train-iters", type=int, default=200)
+    ap.add_argument("--capacity-gb", type=float, default=8.0)
+    ap.add_argument("--policy", default="priority")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    ex = SalusExecutor(
+        capacity=int(args.capacity_gb * GB), policy=get_policy(args.policy)
+    )
     vdev = VirtualDevice(ex)
     names = args.archs.split(",")
+    rng = random.Random(args.seed)
     for name in names:
         handle, params, data_fn = make_service(name, args.smoke)
+        reqs = poisson_requests(args.rps, args.duration, rng)
+        if args.requests is not None:
+            reqs = reqs[: args.requests]
         vdev.create_session(
-            name, handle, params, data_fn, n_iters=args.requests,
-            kind="inference", utilization=0.3,
+            name, handle, params, data_fn, n_iters=len(reqs),
+            kind="inference", utilization=0.3, request_times=reqs,
         )
-    print(f"[serve] packed {len(names)} models into 1 device "
+    if args.train_background:
+        step, params, data_fn = make_trainer(args.train_background, args.smoke)
+        vdev.create_session(
+            f"train:{args.train_background}", step, params, data_fn,
+            n_iters=args.train_iters, kind="train", utilization=0.9,
+        )
+    print(f"[serve] packed {len(names)} services into 1 device "
           f"({ex.registry.stats()['n_lanes']} lanes, "
-          f"{ex.registry.stats()['free']/2**30:.1f} GiB free)")
+          f"{ex.registry.stats()['free']/2**30:.1f} GiB free"
+          + (f", + background training {args.train_background}"
+             if args.train_background else "") + ")")
     t0 = time.perf_counter()
-    report = vdev.run()
+    report = vdev.run(max_wall=args.duration + 5.0)
     dt = time.perf_counter() - t0
-    total = sum(s.iterations_done for s in report.stats.values())
+    total = sum(
+        s.iterations_done for jid, s in report.stats.items()
+        if ex.sessions[jid].job.kind == "inference"
+    )
     print(f"[serve] {total} requests in {dt:.2f}s "
-          f"({total/dt:.1f} req/s across {len(names)} resident models)")
+          f"({total/dt:.1f} req/s across {len(names)} resident services)")
     for jid, s in report.stats.items():
-        print(f"  job {jid}: {s.iterations_done} reqs, "
-              f"mean latency {s.service_time/max(s.iterations_done,1)*1e3:.1f} ms")
+        job = ex.sessions[jid].job
+        if job.kind == "inference":
+            ms = lambda v: f"{v*1e3:.1f}" if v is not None else "n/a"
+            print(f"  {job.name}: {s.iterations_done} reqs, latency ms "
+                  f"p50={ms(s.p50_latency)} p95={ms(s.p95_latency)} "
+                  f"p99={ms(s.p99_latency)}")
+        else:
+            print(f"  {job.name}: {s.iterations_done} training iterations "
+                  f"({s.preemptions} boundary preemptions)")
+    if report.failures:
+        for jid, err in report.failures.items():
+            print(f"  FAILED {ex.sessions[jid].job.name}: {err}")
+    return report
 
 
 if __name__ == "__main__":

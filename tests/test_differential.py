@@ -45,7 +45,7 @@ from repro.core import (
     get_policy,
 )
 from repro.core.session import Session
-from repro.core.tracegen import generate_trace
+from repro.core.tracegen import generate_trace, request_trace
 
 CAP = 16 * GB
 # transfers modeled ~free so paging decisions, not transfer costs, dominate
@@ -263,6 +263,116 @@ def test_second_chance_readmission_identical(policy):
     assert [(n, i) for n, i, _ in srecs] == [(n, i) for n, i, _ in erecs]
     assert set(sjct) == set(ejct) == {"res", "burst"}
     assert_jcts_close(sjct, ejct, factor=2.5)
+
+
+# ---------------------------------------------------------------------------
+# PRIORITY + open-loop request streams: the serving differential
+# ---------------------------------------------------------------------------
+
+# Mid-size inference profiles + a small background trainer on a 450 MB
+# device: tight enough that admission control queues a service and (with
+# paging on) pages persistent regions, so the differential covers the full
+# event vocabulary, not just ADMIT.
+SERVE_POOL = ["alexnet_25", "googlenet_25", "overfeat_25", "vgg11_25"]
+SERVE_CAP = 450 * 1024 * 1024
+
+
+def serve_trace(seed):
+    """Seeded ms-scale open-loop co-location trace: 4 services + 1
+    best-effort training job (identical on every call — both engines build
+    their jobs from it)."""
+    return request_trace(
+        n_services=4, seed=seed, rps=4.0, duration=1.0, names=SERVE_POOL,
+        train_background="vae_256", train_iters=30, iter_time_scale=0.05,
+    )
+
+
+def run_serve_exec(seed, paging):
+    ex = SalusExecutor(
+        SERVE_CAP,
+        get_policy("priority"),
+        memory=MemoryConfig(paging=paging, **MEMCFG),
+        accounting="nominal",
+    )
+    names = {}
+    for j in serve_trace(seed):
+        it = j.iter_time
+
+        def step(state, batch, _t=it):
+            time.sleep(_t)  # stand-in for a real device iteration
+            return state
+
+        sess = Session(
+            j.name,
+            step,
+            jnp.zeros((4,), jnp.float32),
+            lambda i: None,
+            j.n_iters,
+            profile=j.profile,
+            iter_time=it,
+            utilization=j.utilization,
+            arrival_time=0.0,
+            kind=j.kind,
+            request_times=j.request_times,
+        )
+        names[sess.job.job_id] = j.name
+        ex.submit(sess)
+    rep = ex.run()
+    recs = [(names[r.job_id], r.index) for r in rep.records]
+    lats = {names[jid]: s.request_latencies for jid, s in rep.stats.items()}
+    return rep, recs, lats
+
+
+@pytest.mark.parametrize(
+    "seed,paging",
+    [(0, False), (1, False), (2, False), (0, True), (3, True), (4, True)],
+)
+def test_priority_openloop_differential(seed, paging):
+    """The tentpole lockdown: PRIORITY over a seeded request_trace yields
+    bitwise-identical decision logs AND per-request orderings in both
+    engines — request-arrival gating shares one clock semantics (virtual
+    time in the simulator, the nominal vclock in the executor), so the
+    whole decision sequence is a pure function of the trace."""
+    jobs = serve_trace(seed)
+    snames = {j.job_id: j.name for j in jobs}
+    sres = Simulator(
+        SERVE_CAP,
+        get_policy("priority"),
+        memory=MemoryConfig(paging=paging, **MEMCFG),
+    ).run(jobs)
+    srecs = [(snames[r.job_id], r.index) for r in sres.records]
+    slats = {snames[jid]: s.request_latencies for jid, s in sres.stats.items()}
+
+    erep, erecs, elats = run_serve_exec(seed, paging)
+    # decision log: admission/queue/second-chance/paging, bitwise
+    assert sres.decision_log == erep.decision_log
+    # the scenario exercises contention machinery, not just ADMITs
+    kinds = {k for k, *_ in sres.decision_log}
+    assert kinds & {"queue", "second_chance", "page_out"}
+    if paging:
+        assert {"page_out", "page_in"} <= kinds
+    # per-request ordering: exclusive regime -> identical total order
+    assert srecs == erecs
+    # request latencies are pure functions of the trace in BOTH engines:
+    # the executor's nominal vclock replays the simulator's virtual time
+    assert set(slats) == set(elats)
+    for name in slats:
+        assert slats[name] == pytest.approx(elats[name], abs=1e-9)
+
+
+def test_priority_openloop_inference_preempts_at_boundaries():
+    """In the co-location trace, the background trainer is preempted at
+    iteration boundaries (never aborted: its iteration count is exact) and
+    every service's request stream completes in both engines."""
+    jobs = serve_trace(0)
+    sres = Simulator(SERVE_CAP, get_policy("priority"),
+                     memory=MemoryConfig(**MEMCFG)).run(jobs)
+    train_id = [j.job_id for j in jobs if j.kind == "train"][0]
+    assert sres.stats[train_id].preemptions > 0
+    assert sres.stats[train_id].iterations_done == 30
+    for j in jobs:
+        if j.kind == "inference" and not sres.stats[j.job_id].rejected:
+            assert sres.stats[j.job_id].iterations_done == j.n_iters
 
 
 def test_executor_real_paging_moves_session_state():

@@ -1,0 +1,405 @@
+"""Priority-preemptive serving subsystem: PRIORITY policy semantics,
+open-loop request streams, latency accounting, the serve driver's CLI, and
+the live-path bugfixes (adaptor plumbing, failure isolation, stable
+seeding)."""
+import time
+import zlib
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    GB,
+    MB,
+    JobSpec,
+    MemoryProfile,
+    SalusExecutor,
+    Simulator,
+    VirtualDevice,
+    get_policy,
+    percentile,
+)
+from repro.core.scheduler import PRIORITY
+from repro.core.session import Session
+from repro.core.tracegen import request_trace
+from repro.core.types import JobStats
+
+
+def job(name, p=100, e=2000, n_iters=10, iter_time=1.0, arrival=0.0, util=0.9,
+        kind="train", priority=None, request_times=None):
+    return JobSpec(
+        name=name,
+        profile=MemoryProfile(p * MB, e * MB),
+        n_iters=n_iters,
+        iter_time=iter_time,
+        arrival_time=arrival,
+        utilization=util,
+        kind=kind,
+        priority=priority,
+        request_times=request_times,
+    )
+
+
+def by_name(res, name):
+    return [s for jid, s in res.stats.items() if res.jobs[jid].name == name][0]
+
+
+# ---------------------------------------------------------------------------
+# JobSpec open-loop/priority surface
+# ---------------------------------------------------------------------------
+
+
+def test_kind_defaults_set_priority_classes():
+    assert job("t", kind="train").effective_priority == 0
+    assert job("i", kind="inference", request_times=(0.0,) * 10).effective_priority == 1
+    assert job("t2", kind="train", priority=7).effective_priority == 7
+
+
+def test_request_times_validation():
+    with pytest.raises(ValueError):
+        job("bad-len", n_iters=3, request_times=(0.0, 1.0))
+    with pytest.raises(ValueError):
+        job("bad-order", n_iters=3, request_times=(0.0, 2.0, 1.0))
+
+
+def test_request_pending_gate():
+    j = job("svc", kind="inference", n_iters=3, request_times=(1.0, 2.0, 5.0))
+    assert not j.request_pending(0, 0.5)
+    assert j.request_pending(0, 1.0)
+    assert j.request_pending(1, 2.5)
+    assert not j.request_pending(2, 4.0)
+    assert not j.request_pending(3, 99.0)  # exhausted stream
+    assert j.next_request_time(2) == 5.0 and j.next_request_time(3) is None
+    assert job("train").request_pending(0, 0.0)  # closed-loop: always ready
+
+
+# ---------------------------------------------------------------------------
+# Latency percentile accounting
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_nearest_rank():
+    vals = [float(i) for i in range(1, 101)]
+    assert percentile(vals, 0.0) == 1.0
+    assert percentile(vals, 0.50) == 51.0  # nearest-rank on 100 samples
+    assert percentile(vals, 0.95) == 95.0  # index round(0.95 * 99) = 94
+    assert percentile(vals, 1.0) == 100.0
+    assert percentile([], 0.5) is None
+    with pytest.raises(ValueError):
+        percentile(vals, 1.5)
+
+
+def test_jobstats_latency_helpers():
+    st = JobStats()
+    assert st.p50_latency is None
+    st.request_latencies.extend([0.010, 0.020, 0.030, 0.040, 0.100])
+    assert st.p50_latency == 0.030
+    assert st.p95_latency == 0.100
+    assert st.p99_latency == 0.100
+    assert st.latency_percentile(0.0) == 0.010
+
+
+def test_simulator_records_queueing_plus_service():
+    """A request arriving while the device is free sees pure service time;
+    one arriving mid-training-iteration also pays the wait for the
+    boundary."""
+    jobs = [
+        job("train", n_iters=4, iter_time=10.0, e=1000),
+        job("svc", kind="inference", n_iters=2, iter_time=1.0, e=1000,
+            request_times=(15.0, 42.0)),
+    ]
+    res = Simulator(16 * GB, get_policy("priority")).run(jobs)
+    svc = by_name(res, "svc")
+    # request 0 arrived at 15 mid-iteration [10, 20): waits 5s, serves 1s
+    assert svc.request_latencies[0] == pytest.approx(6.0)
+    # request 1 arrived at 42 with training finished and device idle
+    assert svc.request_latencies[1] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# PRIORITY policy semantics
+# ---------------------------------------------------------------------------
+
+
+def test_priority_prefers_inference_class():
+    t = job("train", arrival=0.0)
+    i = job("svc", kind="inference", arrival=5.0, n_iters=10,
+            request_times=tuple(float(k) for k in range(10)))
+    stats = {t.job_id: JobStats(), i.job_id: JobStats()}
+    assert PRIORITY().select([t, i], stats, 10.0) is i
+
+
+def test_priority_fair_tiebreak_within_class():
+    a = job("a", kind="inference", n_iters=10,
+            request_times=tuple(float(k) for k in range(10)))
+    b = job("b", kind="inference", n_iters=10,
+            request_times=tuple(float(k) for k in range(10)))
+    stats = {a.job_id: JobStats(), b.job_id: JobStats()}
+    stats[a.job_id].service_time = 5.0
+    stats[b.job_id].service_time = 1.0  # underserved -> picked
+    assert PRIORITY().select([a, b], stats, 10.0) is b
+
+
+def test_priority_aging_validation():
+    with pytest.raises(ValueError):
+        PRIORITY(aging=0.0)
+    assert get_policy("priority").name == "priority"
+
+
+def test_inference_preempts_training_at_boundary_never_mid_iteration():
+    """The Fig. 9/10 mechanism: a request arriving mid-iteration waits for
+    the boundary (granularity), then wins the device (priority)."""
+    jobs = [
+        job("train", n_iters=100, iter_time=10.0, e=1000),
+        job("svc", kind="inference", n_iters=1, iter_time=1.0, e=1000,
+            request_times=(12.0,)),
+    ]
+    res = Simulator(16 * GB, get_policy("priority")).run(jobs)
+    svc, train = by_name(res, "svc"), by_name(res, "train")
+    # never mid-iteration: the in-flight training iteration [10, 20) finishes
+    assert svc.first_run_time == pytest.approx(20.0)
+    # at the next boundary: inference won over the (otherwise runnable) train
+    assert train.preemptions >= 1
+    recs = sorted(res.records, key=lambda r: r.start)
+    svc_pos = [i for i, r in enumerate(recs) if res.jobs[r.job_id].name == "svc"]
+    assert svc_pos[0] == 2  # train iters [0,10),[10,20), then the request
+
+
+def test_strict_priority_starves_low_class_without_aging():
+    """Saturating inference load: back-to-back requests monopolize the
+    device under pure strict priority."""
+    n_req = 40
+    jobs = [
+        job("train", n_iters=50, iter_time=1.0, e=1000),
+        job("svc", kind="inference", n_iters=n_req, iter_time=1.0, e=1000,
+            request_times=tuple(float(k) for k in range(n_req))),
+    ]
+    res = Simulator(16 * GB, get_policy("priority")).run(jobs, until=n_req - 1)
+    assert by_name(res, "train").iterations_done <= 2  # nothing past startup
+
+
+def test_aging_bounds_low_priority_starvation():
+    """With the aging knob, the starved training job is periodically
+    promoted: its wait between iterations is bounded by ~aging."""
+    n_req = 40
+    aging = 5.0
+    jobs = [
+        job("train", n_iters=50, iter_time=1.0, e=1000),
+        job("svc", kind="inference", n_iters=n_req, iter_time=1.0, e=1000,
+            request_times=tuple(float(k) for k in range(n_req))),
+    ]
+    res = Simulator(16 * GB, PRIORITY(aging=aging)).run(jobs, until=n_req - 1)
+    train = by_name(res, "train")
+    assert train.iterations_done >= (n_req - 1) / (aging + 2.0)
+    gaps = sorted(
+        r.start for r in res.records if res.jobs[r.job_id].name == "train"
+    )
+    assert max(b - a for a, b in zip(gaps, gaps[1:])) <= aging + 2.0
+
+
+# ---------------------------------------------------------------------------
+# request_trace generator
+# ---------------------------------------------------------------------------
+
+
+def test_request_trace_deterministic_and_well_formed():
+    a = request_trace(n_services=3, seed=9, rps=2.0, duration=20.0,
+                      train_background="vae_256")
+    b = request_trace(n_services=3, seed=9, rps=2.0, duration=20.0,
+                      train_background="vae_256")
+    assert [j.request_times for j in a] == [j.request_times for j in b]
+    assert [j.name for j in a] == [j.name for j in b]
+    svcs, trains = [j for j in a if j.kind == "inference"], [
+        j for j in a if j.kind == "train"
+    ]
+    assert len(svcs) == 3 and len(trains) == 1
+    for j in svcs:
+        assert j.n_iters == len(j.request_times) >= 1
+        assert list(j.request_times) == sorted(j.request_times)
+        assert all(0.0 <= t < 20.0 for t in j.request_times)
+        assert j.effective_priority == 1
+    assert trains[0].effective_priority == 0
+    assert trains[0].n_iters * trains[0].iter_time >= 20.0  # spans the window
+
+
+def test_request_trace_time_dilation_preserves_load():
+    full = request_trace(n_services=2, seed=4, rps=2.0, duration=10.0)
+    tiny = request_trace(n_services=2, seed=4, rps=2.0, duration=10.0,
+                         iter_time_scale=0.01)
+    for f, t in zip(full, tiny):
+        assert t.n_iters == f.n_iters
+        assert t.iter_time == pytest.approx(f.iter_time * 0.01, rel=1e-3)
+        for ft, tt in zip(f.request_times, t.request_times):
+            assert tt == pytest.approx(ft * 0.01, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# serve driver: CLI + stable seeding (live-path bugfixes)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_smoke_flag_is_boolean_optional():
+    from repro.launch.serve import build_parser
+
+    ap = build_parser()
+    assert ap.parse_args([]).smoke is True  # smoke stays the default
+    assert ap.parse_args(["--no-smoke"]).smoke is False  # now reachable
+    args = ap.parse_args(
+        ["--rps", "3.5", "--duration", "7", "--train-background", "gemma-2b"]
+    )
+    assert args.rps == 3.5 and args.duration == 7.0
+    assert args.train_background == "gemma-2b"
+
+
+def test_serve_seeding_is_a_stable_digest():
+    """hash(str) is salted per process (PYTHONHASHSEED): params must come
+    from a digest that is identical across runs."""
+    from repro.launch.serve import stable_seed
+
+    assert stable_seed("gemma-2b") == zlib.crc32(b"gemma-2b") % 2**31
+    assert stable_seed("gemma-2b") == stable_seed("gemma-2b")
+    assert stable_seed("gemma-2b") != stable_seed("qwen3-8b")
+
+
+# ---------------------------------------------------------------------------
+# Adaptor plumbing regression (create_session dropped arrival/iter_time)
+# ---------------------------------------------------------------------------
+
+
+def test_adaptor_plumbs_iter_time_and_arrival_time():
+    ex = SalusExecutor(1 * GB, get_policy("fifo"))
+    vdev = VirtualDevice(ex)
+    sess = vdev.create_session(
+        "svc", lambda s, b: s + 1.0, jnp.zeros((4,)), lambda i: None,
+        n_iters=3, profile=MemoryProfile(4 * MB, 16 * MB),
+        iter_time=0.125, arrival_time=2.5, kind="inference", priority=3,
+        request_times=(2.5, 3.0, 4.0),
+    )
+    assert sess.job.iter_time == 0.125
+    assert sess.job.arrival_time == 2.5
+    assert sess.job.priority == 3 and sess.job.effective_priority == 3
+    assert sess.job.request_times == (2.5, 3.0, 4.0)
+
+
+def test_adaptor_sessions_reproduce_declared_trace_decisions():
+    """Regression for the dropped-kwargs bug: with iter_time plumbed
+    through, the live executor's decision log is identical to simulating
+    the declared trace. Pre-fix, every session ran with iter_time=0.01, so
+    SRTF ordered A and B differently and job C landed in another lane."""
+    cap = 100 * MB
+    declared = [
+        dict(name="A", p=30, e=40, n_iters=3, iter_time=0.004),
+        dict(name="B", p=30, e=10, n_iters=2, iter_time=0.010),
+        dict(name="C", p=10, e=40, n_iters=2, iter_time=0.002),
+    ]
+    sim_jobs = [
+        JobSpec(
+            name=d["name"],
+            profile=MemoryProfile(d["p"] * MB, d["e"] * MB),
+            n_iters=d["n_iters"],
+            iter_time=d["iter_time"],
+        )
+        for d in declared
+    ]
+    sres = Simulator(cap, get_policy("srtf")).run(sim_jobs)
+
+    ex = SalusExecutor(cap, get_policy("srtf"), accounting="nominal")
+    vdev = VirtualDevice(ex)
+    for d in declared:
+        vdev.create_session(
+            d["name"], lambda s, b: s + 1.0, jnp.zeros((4,)), lambda i: None,
+            n_iters=d["n_iters"],
+            profile=MemoryProfile(d["p"] * MB, d["e"] * MB),
+            iter_time=d["iter_time"],
+        )
+    rep = vdev.run()
+    assert ("queue", 2, "C", None) in sres.decision_log  # scenario armed
+    assert rep.decision_log == sres.decision_log
+    sim_order = [sres.jobs[r.job_id].name for r in sres.records]
+    exec_order = [ex.sessions[r.job_id].name for r in rep.records]
+    assert exec_order == sim_order == ["A", "A", "A", "C", "C", "B", "B"]
+
+
+# ---------------------------------------------------------------------------
+# Executor failure isolation (step_fn raising must not strand the run)
+# ---------------------------------------------------------------------------
+
+
+def _session(name, step, n_iters, p_mb, e_mb, iter_time=0.002):
+    return Session(
+        name, step, jnp.zeros((4,), jnp.float32), lambda i: None, n_iters,
+        profile=MemoryProfile(p_mb * MB, e_mb * MB), iter_time=iter_time,
+    )
+
+
+def test_failing_session_is_isolated_and_frees_its_lane():
+    ex = SalusExecutor(100 * MB, get_policy("fifo"), accounting="nominal")
+
+    def bad_step(state, batch):
+        raise RuntimeError("synthetic kernel crash")
+
+    def good_step(state, batch):
+        return state + 1.0
+
+    bad = _session("bad", bad_step, 5, p_mb=10, e_mb=30)
+    good = _session("good", good_step, 4, p_mb=10, e_mb=30)
+    # queued: only fits once a resident job's lane is freed
+    queued = _session("queued", good_step, 3, p_mb=10, e_mb=60)
+    for s in (bad, good, queued):
+        ex.submit(s)
+    assert [j.name for j in ex.registry.queue] == ["queued"]
+    rep = ex.run()
+    # the failure is terminal and surfaced, not fatal to the run
+    assert list(rep.failures.values()) == ["RuntimeError: synthetic kernel crash"]
+    assert rep.stats[bad.job.job_id].failed
+    assert rep.stats[bad.job.job_id].iterations_done == 0
+    # the healthy session completed untouched
+    assert good.finished
+    assert rep.stats[good.job.job_id].iterations_done == 4
+    # the failed job's lane went back to the pool and admitted the queued job
+    assert queued.finished
+    assert bad.job.job_id not in ex.registry.assignment
+    kinds = [(k, n) for k, _o, n, _l in rep.decision_log]
+    assert ("second_chance", "queued") in kinds or ("admit", "queued") in kinds
+
+
+def test_failure_in_data_fn_also_isolated():
+    ex = SalusExecutor(100 * MB, get_policy("fifo"), accounting="nominal")
+
+    def step(state, batch):
+        return state + 1.0
+
+    sess = Session(
+        "bad-data", step, jnp.zeros((4,), jnp.float32),
+        lambda i: (_ for _ in ()).throw(ValueError("bad batch")), 3,
+        profile=MemoryProfile(10 * MB, 30 * MB), iter_time=0.002,
+    )
+    ok = _session("ok", step, 2, p_mb=10, e_mb=30)
+    ex.submit(sess)
+    ex.submit(ok)
+    rep = ex.run()
+    assert "ValueError" in list(rep.failures.values())[0]
+    assert ok.finished and not rep.stats[ok.job.job_id].failed
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the Fig. 9/10 co-location regime in the simulator
+# ---------------------------------------------------------------------------
+
+
+def test_colocated_serving_regime_end_to_end():
+    jobs = request_trace(n_services=3, seed=2, rps=2.0, duration=30.0,
+                         train_background="resnet50_25")
+    res = Simulator(16 * GB, get_policy("priority")).run(jobs)
+    svcs = [s for jid, s in res.stats.items()
+            if res.jobs[jid].kind == "inference"]
+    train = [s for jid, s in res.stats.items()
+             if res.jobs[jid].kind == "train"][0]
+    # every request of every service got served
+    for s in svcs:
+        assert s.iterations_done == len(s.request_latencies) > 0
+        # tail latency bounded by ~one training iteration + own service time
+        assert s.p99_latency < 0.186 + 0.2
+    # background training degraded gracefully, not starved
+    assert train.iterations_done > 0.5 * 30.0 / 0.186
+    assert train.preemptions > 0
