@@ -1,0 +1,133 @@
+"""Paper Fig. 5/6 cluster regime: the fleet comparison behind the 3.19x.
+
+A ``cluster_trace`` (Table-2-style mixed trace scaled to the fleet) runs
+through :class:`Cluster` twice per comparison:
+
+* baseline — FIFO-exclusive, the one-job-per-GPU cluster of today
+  (placement still chooses the GPU; each GPU runs jobs to completion in
+  arrival order, so co-residents only wait),
+* Salus — the same placement, each GPU time-shared at iteration
+  granularity by SRTF / FAIR / PACK.
+
+Reports fleet avg/p95 JCT per policy, the headline SRTF-vs-FIFO
+avg-JCT improvement factor, per-device utilization, and a placement-
+strategy sweep (LEAST_LOADED / BEST_FIT / CONSOLIDATE — the Fig. 12
+packing regime keeps whole GPUs free). ``--json`` writes the summaries
+(tracked by CI as the bench-cluster-smoke artifact); ``--fast`` shrinks
+the trace to smoke scale.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core import GB, Cluster, MemoryConfig
+from repro.core.tracegen import cluster_trace
+
+
+def run(
+    n_devices: int = 4,
+    jobs_per_device: int = 25,
+    seed: int = 42,
+    capacity_gb: float = 16.0,
+    strategy: str = "least_loaded",
+    policies=("srtf", "fair", "pack"),
+    paging: bool = False,
+    fast: bool = False,
+):
+    if fast:
+        jobs_per_device = min(jobs_per_device, 5)
+    capacity = int(capacity_gb * GB)
+    mk = lambda: cluster_trace(n_devices, jobs_per_device=jobs_per_device, seed=seed)
+    memcfg = lambda: MemoryConfig(paging=paging)
+
+    results = {}
+    for pol in ("fifo",) + tuple(policies):
+        t0 = time.perf_counter()
+        res = Cluster(
+            n_devices, capacity, pol, strategy=strategy, memory=memcfg()
+        ).run(mk())
+        sim_us = (time.perf_counter() - t0) * 1e6
+        s = res.summary()
+        results[pol] = s
+        util = ";".join(f"{u:.2f}" for u in s["per_device_utilization"])
+        emit(
+            f"fig5_cluster_{pol}",
+            sim_us,
+            f"avg_jct_min={s['avg_jct']/60:.1f};p95_jct_min={s['p95_jct']/60:.1f};"
+            f"makespan_min={s['makespan']/60:.1f};completed={s['completed']}/{s['n_jobs']};"
+            f"devices_used={s['devices_used']}/{n_devices};util={util};"
+            f"queued_at_placement={s['queued_at_placement']}",
+        )
+    improvement = results["fifo"]["avg_jct"] / max(results["srtf"]["avg_jct"], 1e-9)
+    results["srtf_vs_fifo_avg_jct_improvement"] = improvement
+    emit(
+        "fig5_salus_srtf_vs_fifo_avg_jct",
+        0.0,
+        f"improvement={improvement:.2f}x;paper=3.19x;n_devices={n_devices}",
+    )
+
+    # Fig. 12 packing regime: CONSOLIDATE packs onto the fewest devices
+    # (whole idle GPUs stay free for elastic headroom), vs spread/fit
+    sweep = {}
+    for strat in ("least_loaded", "best_fit", "consolidate"):
+        res = Cluster(
+            n_devices, capacity, "srtf", strategy=strat, memory=memcfg()
+        ).run(mk())
+        s = res.summary()
+        sweep[strat] = s
+        emit(
+            f"fig12_placement_{strat}",
+            0.0,
+            f"devices_used={s['devices_used']}/{n_devices};"
+            f"avg_jct_min={s['avg_jct']/60:.1f};"
+            f"queued_at_placement={s['queued_at_placement']}",
+        )
+    results["placement_sweep"] = sweep
+    return results
+
+
+def main(argv=None):
+    import argparse
+    import json
+    from pathlib import Path
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-devices", type=int, default=4, help="fleet size")
+    ap.add_argument("--jobs-per-device", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--capacity-gb", type=float, default=16.0, help="per-device memory")
+    ap.add_argument(
+        "--strategy",
+        default="least_loaded",
+        choices=("least_loaded", "best_fit", "consolidate"),
+        help="placement strategy for the policy comparison",
+    )
+    ap.add_argument(
+        "--paging",
+        action="store_true",
+        help="enable fungible-memory host paging on every device",
+    )
+    ap.add_argument(
+        "--fast", action="store_true", help="smoke scale (5 jobs per device)"
+    )
+    ap.add_argument("--json", default=None, help="write per-policy summaries here")
+    args = ap.parse_args(argv)
+    results = run(
+        n_devices=args.n_devices,
+        jobs_per_device=args.jobs_per_device,
+        seed=args.seed,
+        capacity_gb=args.capacity_gb,
+        strategy=args.strategy,
+        paging=args.paging,
+        fast=args.fast,
+    )
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(results, indent=2, default=float))
+        print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import emit
-from repro.core import GB, MemoryConfig, Simulator, get_policy
+from repro.core import GB, MemoryConfig, Simulator, get_policy, percentile
 from repro.core.tracegen import generate_trace
 
 
@@ -42,8 +42,8 @@ def run(
     for pol in ("fifo", "srtf", "pack", "fair"):
         jobs = generate_trace(n_jobs=n_jobs, seed=seed)
         res = Simulator(capacity=capacity, policy=get_policy(pol), memory=memcfg()).run(jobs)
-        jcts = sorted(res.jcts)
-        q = lambda p: jcts[int(p * (len(jcts) - 1))] / 60
+        jcts = res.jcts
+        q = lambda p: (percentile(jcts, p) or 0.0) / 60
         emit(
             f"fig8_jct_cdf_{pol}",
             0.0,

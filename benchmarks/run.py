@@ -2,6 +2,7 @@
 """Benchmark harness.
 
   table2/fig8  bench_schedulers   FIFO/SRTF/PACK/FAIR on the 100-job trace
+  fig5/6       bench_cluster      multi-GPU fleet: placement + per-GPU sharing
   fig11        bench_fair         3-way fair sharing throughput
   fig12        bench_hyperparam   PACK vs FIFO hyper-parameter makespan
   fig13        bench_inference    inference packing (42 models -> N devices)
@@ -22,6 +23,7 @@ def main() -> None:
     modules = [
         "benchmarks.bench_comparison",
         "benchmarks.bench_schedulers",
+        "benchmarks.bench_cluster",
         "benchmarks.bench_fair",
         "benchmarks.bench_hyperparam",
         "benchmarks.bench_inference",

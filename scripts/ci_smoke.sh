@@ -32,6 +32,10 @@ echo "== benchmark smoke: fungible memory (Fig. 7 overcommit regime) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_memory \
     --fast --overcommit-factor 4.0 --json experiments/bench_memory_smoke.json
 
+echo "== benchmark smoke: cluster fleet (Fig. 5/6 multi-GPU regime) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_cluster \
+    --fast --json experiments/bench_cluster_smoke.json
+
 echo "== benchmark smoke: priority serving (Fig. 9/10 co-location regime) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serve \
     --fast --json experiments/bench_serve_smoke.json

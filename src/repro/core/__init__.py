@@ -5,10 +5,21 @@ Public surface:
   * policies — FIFO / SRTF / PACK / FAIR / PRIORITY (``get_policy``)
   * :class:`Simulator` — discrete-event trace evaluation
   * :class:`SalusExecutor` + :class:`VirtualDevice` — live execution service
+  * :class:`Cluster` / :class:`ClusterExecutor` — multi-GPU fleet behind
+    placement strategies (``get_strategy``: least_loaded/best_fit/consolidate)
   * profiles / tracegen — workload tables + trace/request-stream generation
 """
 from repro.core.adaptor import VirtualDevice
+from repro.core.cluster import Cluster, ClusterExecutor, ClusterReport, ClusterResult
 from repro.core.executor import SalusExecutor
+from repro.core.placement import (
+    Placer,
+    PlacementEvent,
+    PlacementEventKind,
+    PlacementPlan,
+    PlacementStrategy,
+    get_strategy,
+)
 from repro.core.lanes import Lane, LaneRegistry, SafetyViolation
 from repro.core.memory import MemoryConfig, MemoryManager
 from repro.core.scheduler import FAIR, FIFO, PACK, PRIORITY, SRTF, Policy, get_policy
@@ -27,6 +38,16 @@ from repro.core.types import (
 
 __all__ = [
     "VirtualDevice",
+    "Cluster",
+    "ClusterExecutor",
+    "ClusterReport",
+    "ClusterResult",
+    "Placer",
+    "PlacementEvent",
+    "PlacementEventKind",
+    "PlacementPlan",
+    "PlacementStrategy",
+    "get_strategy",
     "PRIORITY",
     "percentile",
     "SalusExecutor",

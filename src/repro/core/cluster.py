@@ -1,0 +1,286 @@
+"""Cluster-scale Salus: a fleet of per-device engines behind placement.
+
+The paper's headline numbers (§5.1, Fig. 5/6) come from a *cluster*
+regime: a fleet scheduler places jobs onto GPUs and Salus time-shares
+each GPU. :class:`Cluster` owns N per-device :class:`Simulator` instances
+— each with its own :class:`LaneRegistry` + :class:`MemoryManager` +
+policy — behind a :class:`Placer` (see :mod:`repro.core.placement` for
+the LEAST_LOADED / BEST_FIT / CONSOLIDATE strategies and the
+deficit-ordered queue-and-retry). :class:`ClusterExecutor` is the live
+mirror: N :class:`SalusExecutor` instances driven per-device by the same
+placement decisions (the placer only reads :class:`JobSpec`s, so the
+plan is engine-agnostic).
+
+An N=1 cluster is bitwise-identical to a bare single-device engine on
+the same trace: placement binds every job to device 0 with its original
+arrival time, and the device engine replays exactly the single-device
+decision sequence (locked by ``tests/test_differential.py``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.core.executor import ExecutorReport, SalusExecutor
+from repro.core.memory import MemoryConfig
+from repro.core.placement import Placer, PlacementPlan, PlacementStrategy
+from repro.core.scheduler import Policy, get_policy
+from repro.core.simulator import SimResult, Simulator
+from repro.core.types import IterationRecord, JobSpec, JobStats, percentile
+
+
+def _busy_seconds(records: Sequence[IterationRecord]) -> float:
+    """Total device-busy wall time: union of iteration intervals (lanes
+    overlap under concurrent policies, so plain summation overcounts)."""
+    spans = sorted((r.start, r.end) for r in records)
+    total, cur_start, cur_end = 0.0, None, None
+    for s, e in spans:
+        if cur_end is None or s > cur_end:
+            if cur_end is not None:
+                total += cur_end - cur_start
+            cur_start, cur_end = s, e
+        else:
+            cur_end = max(cur_end, e)
+    if cur_end is not None:
+        total += cur_end - cur_start
+    return total
+
+
+@dataclass
+class ClusterResult:
+    """Aggregation of per-device :class:`SimResult`s plus the placement
+    decision log (fleet avg/p95 JCT, per-device utilization)."""
+
+    device_results: List[SimResult]
+    plan: PlacementPlan
+    jobs: Dict[int, JobSpec] = field(default_factory=dict)
+
+    # -- fleet-wide JCT aggregation ------------------------------------
+
+    @property
+    def stats(self) -> Dict[int, JobStats]:
+        out: Dict[int, JobStats] = {}
+        for res in self.device_results:
+            out.update(res.stats)
+        return out
+
+    @property
+    def jcts(self) -> List[float]:
+        return [v for res in self.device_results for v in res.jcts]
+
+    @property
+    def avg_jct(self) -> float:
+        v = self.jcts
+        return sum(v) / len(v) if v else 0.0
+
+    @property
+    def p95_jct(self) -> float:
+        v = percentile(self.jcts, 0.95)
+        return 0.0 if v is None else v
+
+    @property
+    def makespan(self) -> float:
+        return max((r.makespan for r in self.device_results), default=0.0)
+
+    @property
+    def completed(self) -> int:
+        return sum(r.completed for r in self.device_results)
+
+    @property
+    def devices_used(self) -> int:
+        return sum(1 for r in self.device_results if r.records)
+
+    @property
+    def per_device_utilization(self) -> List[float]:
+        """Busy fraction of each device over the fleet makespan."""
+        span = self.makespan
+        if span <= 0.0:
+            return [0.0 for _ in self.device_results]
+        return [_busy_seconds(r.records) / span for r in self.device_results]
+
+    def placement_log(self) -> List[tuple]:
+        return self.plan.decision_log()
+
+    def summary(self) -> Dict:
+        placed = len(self.plan.assignments)
+        queued = sum(
+            1 for e in self.plan.events if e.kind.value == "queue"
+        )
+        return {
+            "n_devices": self.plan.n_devices,
+            "devices_used": self.devices_used,
+            "makespan": self.makespan,
+            "avg_jct": self.avg_jct,
+            "p95_jct": self.p95_jct,
+            "n_jobs": placed + len(self.plan.rejected),
+            "placed": placed,
+            "queued_at_placement": queued,
+            # device-level rejects are exactly the routed cluster rejects
+            # (a placed job always has P + E <= its device's capacity)
+            "rejected": len(self.plan.rejected),
+            "completed": self.completed,
+            "per_device_utilization": self.per_device_utilization,
+            "per_device_jobs": [len(r.stats) for r in self.device_results],
+        }
+
+
+class Cluster:
+    """N per-device Simulators behind a placement policy."""
+
+    def __init__(
+        self,
+        n_devices: int,
+        capacity: Union[int, Sequence[int]],
+        policy: Union[str, Policy],
+        strategy: Union[str, PlacementStrategy] = PlacementStrategy.LEAST_LOADED,
+        switch_overhead: float = 0.0,
+        memory: Optional[MemoryConfig] = None,
+        deficit_quantum: Optional[int] = None,
+    ):
+        self.placer = Placer(
+            n_devices, capacity, strategy, deficit_quantum=deficit_quantum
+        )
+        self.policy = get_policy(policy) if isinstance(policy, str) else policy
+        self.switch_overhead = switch_overhead
+        self.memory = memory
+
+    @property
+    def n_devices(self) -> int:
+        return self.placer.n_devices
+
+    def run(
+        self, jobs: Sequence[JobSpec], until: Optional[float] = None
+    ) -> ClusterResult:
+        plan = self.placer.place(jobs)
+        # infeasible jobs still transit the biggest device's admission
+        # control so they are rejected *in-engine* (uniform per-job stats,
+        # N=1 decision-log parity with a bare Simulator)
+        sink = max(
+            range(self.n_devices), key=lambda i: self.placer.capacities[i]
+        )
+        device_results: List[SimResult] = []
+        for dev_id, dev_jobs in enumerate(
+            plan.device_jobs(jobs, route_rejected_to=sink)
+        ):
+            sim = Simulator(
+                self.placer.capacities[dev_id],
+                self.policy,
+                switch_overhead=self.switch_overhead,
+                memory=self.memory,
+            )
+            device_results.append(sim.run(dev_jobs, until=until))
+        return ClusterResult(
+            device_results, plan, jobs={j.job_id: j for j in jobs}
+        )
+
+
+@dataclass
+class ClusterReport:
+    """Live-side aggregation: per-device :class:`ExecutorReport`s plus the
+    shared placement plan."""
+
+    device_reports: List[ExecutorReport]
+    plan: PlacementPlan
+
+    @property
+    def stats(self) -> Dict[int, JobStats]:
+        out: Dict[int, JobStats] = {}
+        for rep in self.device_reports:
+            out.update(rep.stats)
+        return out
+
+    @property
+    def jcts(self) -> List[float]:
+        return [
+            s.jct
+            for rep in self.device_reports
+            for s in rep.stats.values()
+            if s.jct is not None
+        ]
+
+    @property
+    def avg_jct(self) -> float:
+        v = self.jcts
+        return sum(v) / len(v) if v else 0.0
+
+    @property
+    def p95_jct(self) -> float:
+        v = percentile(self.jcts, 0.95)
+        return 0.0 if v is None else v
+
+    @property
+    def failures(self) -> Dict[int, str]:
+        out: Dict[int, str] = {}
+        for rep in self.device_reports:
+            out.update(rep.failures)
+        return out
+
+    def decision_logs(self) -> List[List[tuple]]:
+        return [rep.decision_log for rep in self.device_reports]
+
+    def placement_log(self) -> List[tuple]:
+        return self.plan.decision_log()
+
+
+class ClusterExecutor:
+    """The live fleet: N SalusExecutors driven per-device by the same
+    placement decisions the simulation cluster uses. Sessions are
+    collected via :meth:`submit`; :meth:`run` places their JobSpecs with
+    the shared :class:`Placer`, hands each session to its device's
+    executor, and drives the devices to completion (sequentially — one
+    host process time-multiplexes the fleet, which preserves each
+    device's decision sequence under nominal accounting)."""
+
+    def __init__(
+        self,
+        n_devices: int,
+        capacity: Union[int, Sequence[int]],
+        policy: Union[str, Policy],
+        strategy: Union[str, PlacementStrategy] = PlacementStrategy.LEAST_LOADED,
+        memory: Optional[MemoryConfig] = None,
+        accounting: str = "wall",
+        deficit_quantum: Optional[int] = None,
+    ):
+        self.placer = Placer(
+            n_devices, capacity, strategy, deficit_quantum=deficit_quantum
+        )
+        policy = get_policy(policy) if isinstance(policy, str) else policy
+        self.executors = [
+            SalusExecutor(
+                self.placer.capacities[i], policy, memory=memory, accounting=accounting
+            )
+            for i in range(n_devices)
+        ]
+        self._sessions: List = []
+
+    @property
+    def n_devices(self) -> int:
+        return self.placer.n_devices
+
+    def submit(self, session) -> None:
+        self._sessions.append(session)
+
+    def run(self, max_wall: Optional[float] = None) -> ClusterReport:
+        """``max_wall`` is a *fleet-wide* budget: devices run sequentially
+        on one host, so each gets whatever remains of it."""
+        plan = self.placer.place([s.job for s in self._sessions])
+        sink = max(
+            range(self.n_devices), key=lambda i: self.placer.capacities[i]
+        )
+        for sess in self._sessions:
+            dev = plan.assignments.get(sess.job.job_id)
+            if dev is None and sess.job.job_id in plan.rejected:
+                dev = sink  # rejected in-engine, mirroring Cluster.run
+            if dev is not None:
+                self.executors[dev].submit(sess)
+        t0 = time.perf_counter()
+        reports = []
+        for ex in self.executors:
+            remaining = (
+                None
+                if max_wall is None
+                else max(0.0, max_wall - (time.perf_counter() - t0))
+            )
+            reports.append(ex.run(max_wall=remaining))
+        return ClusterReport(reports, plan)

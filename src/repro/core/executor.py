@@ -92,6 +92,7 @@ class SalusExecutor:
         self.transfer_latencies: List[float] = []
         self.failures: Dict[int, str] = {}  # job_id -> "ExcType: message"
         self._last_job_on: Dict[int, int] = {}
+        self._last_ran: Optional[int] = None  # job whose iteration just ended
         self._t0: Optional[float] = None
         # Nominal virtual clock: replicates the simulator's time semantics
         # (declared iteration times + modeled transfer charging + jumps to
@@ -224,6 +225,7 @@ class SalusExecutor:
             self.state[job.job_id] = JobState.FAILED
             st.failed = True
             self.failures[job.job_id] = f"{type(exc).__name__}: {exc}"
+            self._last_ran = None
             self.memory.job_finish(job, self._clock())
             return
         end = self.now()
@@ -246,9 +248,11 @@ class SalusExecutor:
         if sess.finished:
             self.state[job.job_id] = JobState.FINISHED
             st.finish_time = end
+            self._last_ran = None
             self.memory.job_finish(job, self._clock())
         else:
             self.state[job.job_id] = JobState.READY
+            self._last_ran = job.job_id
         # second-chance tick: between iterations the ephemeral region is
         # empty, so pending jobs may be re-admitted and P pages may move
         # (memory-event stamps use the same clock request gating does)
@@ -298,11 +302,17 @@ class SalusExecutor:
                 # run() entry otherwise)
                 job = self.policy.select(ready, self.stats, self._clock(), blocked=blocked())
                 if job is not None:
-                    for other in ready:
-                        if other is not job and self.stats[other.job_id].iterations_done:
-                            if self.state[other.job_id] == JobState.READY:
-                                self.state[other.job_id] = JobState.PAUSED
-                                self.stats[other.job_id].preemptions += 1
+                    # genuine preemption only: the job whose iteration just
+                    # ended, still a candidate, displaced by another pick
+                    # (mirrors the simulator's exclusive schedule() branch)
+                    prev = self._last_ran
+                    if (
+                        prev is not None
+                        and prev != job.job_id
+                        and any(o.job_id == prev for o in ready)
+                    ):
+                        self.state[prev] = JobState.PAUSED
+                        self.stats[prev].preemptions += 1
                     self._run_one(self.registry.assignment[job.job_id], job)
                     progressed = True
             else:
@@ -317,6 +327,9 @@ class SalusExecutor:
                         self._run_one(lane, job)
                         progressed = True
             if not progressed:
+                # device going idle: whatever runs after the gap displaces
+                # no one (mirrors the simulator's exclusive schedule())
+                self._last_ran = None
                 if self._done():
                     break
                 # one more boundary tick: paging / second chance may unblock

@@ -93,8 +93,9 @@ class MemoryManager:
         self.deficit: Dict[int, int] = {}
         self.chances: Dict[int, int] = {}  # failed re-admission rounds
         self.rejected: set = set()
-        self.specs: Dict[int, JobSpec] = {}
-        self._order: Dict[int, int] = {}  # job_id -> arrival ordinal
+        self.specs: Dict[int, JobSpec] = {}  # live (unfinished) jobs only
+        self._order: Dict[int, int] = {}  # live job_id -> arrival ordinal
+        self._next_ordinal = 0  # monotone: ordinals never reused after churn
         self._was_pending: set = set()  # left job_arrive unadmitted
         self._now = 0.0
         self.on_admit: Optional[Callable[[JobSpec, Lane], None]] = None
@@ -113,11 +114,14 @@ class MemoryManager:
         self._now = now
         self.specs[job.job_id] = job
         self.deficit.setdefault(job.job_id, 0)
-        self._order.setdefault(job.job_id, len(self._order))
+        if job.job_id not in self._order:
+            self._order[job.job_id] = self._next_ordinal
+            self._next_ordinal += 1
         if job.profile.total > self.registry.capacity:
             # not even an empty device could hold it: fail fast, no chances
             self.rejected.add(job.job_id)
             self._log(MemoryEventKind.REJECT, job)
+            self._forget(job.job_id)
             return None
         lane = self.registry.job_arrive(job)  # fires _handle_admit on success
         if lane is None:
@@ -138,8 +142,18 @@ class MemoryManager:
         # retry that job_finish triggers (stable sort: FIFO within ties)
         self.registry.queue.sort(key=lambda j: -self.deficit.get(j.job_id, 0))
         self.registry.job_finish(job)  # frees lane bytes; retries the queue
-        self.deficit.pop(job.job_id, None)
-        self.chances.pop(job.job_id, None)
+        self._forget(job.job_id)
+
+    def _forget(self, job_id: int) -> None:
+        """Drop a terminal (finished/failed/rejected) job's bookkeeping so a
+        long-lived fleet churning short jobs stays bounded. Already-logged
+        events carry their ordinal (stamped at log time), so the decision
+        log is unaffected; ``_next_ordinal`` keeps ordinals unique forever."""
+        self.deficit.pop(job_id, None)
+        self.chances.pop(job_id, None)
+        self.specs.pop(job_id, None)
+        self._order.pop(job_id, None)
+        self._was_pending.discard(job_id)
 
     def iteration_boundary(
         self, now: float = 0.0, busy: FrozenSet[int] = EMPTY
@@ -270,7 +284,12 @@ class MemoryManager:
 
     def _log(self, kind: MemoryEventKind, job: JobSpec, **kw) -> None:
         ev = MemoryEvent(
-            kind=kind, time=self._now, job_id=job.job_id, job=job, **kw
+            kind=kind,
+            time=self._now,
+            job_id=job.job_id,
+            job=job,
+            ordinal=self._order.get(job.job_id),
+            **kw,
         )
         self.events.append(ev)
         if self.on_event:
@@ -291,11 +310,10 @@ class MemoryManager:
         for e in self.events:
             if e.kind is MemoryEventKind.LANE_MOVED:
                 continue
-            ordinal = self._order.get(e.job_id)
             if with_lanes:
-                out.append((e.kind.value, ordinal, e.name, e.lane_id))
+                out.append((e.kind.value, e.ordinal, e.name, e.lane_id))
             else:
-                out.append((e.kind.value, ordinal, e.name))
+                out.append((e.kind.value, e.ordinal, e.name))
         return out
 
     def stats(self) -> Dict:

@@ -1,0 +1,285 @@
+"""Fleet placement layer: which device should host this job?
+
+The cluster-level analogue of FINDLANE (paper §5.1's evaluation regime: a
+fleet scheduler places jobs onto GPUs, Salus time-shares each GPU). Every
+device runs its own :class:`LaneRegistry`/:class:`MemoryManager`/policy;
+the placer decides, at submission time, which device a job joins, and
+parks jobs no device can currently hold in a *deficit-ordered* pending
+queue retried as modeled capacity frees — mirroring the single-device
+second-chance machinery, so large jobs cannot be starved by a stream of
+small arrivals at the cluster level either.
+
+The placer is deliberately engine-agnostic: it reasons over
+:class:`JobSpec`s with a per-device *shadow* :class:`LaneRegistry`
+(byte-exact admission via ``MemoryManager._bytes_needed``) plus a
+work-conserving load model (outstanding seconds of placed work), so the
+same :class:`PlacementPlan` can drive N discrete-event Simulators or N
+live SalusExecutors. Placement decides *where* a job runs; the chosen
+device's own admission control still decides *when* (a bound job keeps
+its original arrival time and may transit the device's second-chance
+queue) — which is exactly what makes an N=1 cluster bitwise-identical to
+a bare single-device engine.
+
+Strategies:
+
+* ``LEAST_LOADED`` — fewest outstanding seconds of placed work (classic
+  least-work-left; spreads load, minimizes queueing).
+* ``BEST_FIT``     — tightest byte fit: the admitting device with the
+  least free persistent+ephemeral bytes (keeps big contiguous holes for
+  future large jobs).
+* ``CONSOLIDATE``  — pack onto the fewest devices (occupied, fullest
+  first), keeping whole GPUs free — the Fig. 12 packing regime.
+"""
+from __future__ import annotations
+
+import enum
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.core.lanes import LaneRegistry
+from repro.core.memory import MemoryManager
+from repro.core.types import JobSpec
+
+
+class PlacementStrategy(enum.Enum):
+    LEAST_LOADED = "least_loaded"
+    BEST_FIT = "best_fit"
+    CONSOLIDATE = "consolidate"
+
+
+def get_strategy(name: Union[str, PlacementStrategy]) -> PlacementStrategy:
+    if isinstance(name, PlacementStrategy):
+        return name
+    try:
+        return PlacementStrategy(name)
+    except ValueError:
+        known = sorted(s.value for s in PlacementStrategy)
+        raise KeyError(f"unknown placement strategy {name!r}; known: {known}")
+
+
+class PlacementEventKind(enum.Enum):
+    PLACE = "place"  # bound to a device at arrival
+    QUEUE = "queue"  # no device admits now; parked in the cluster queue
+    SECOND_CHANCE = "second_chance"  # bound later, from the pending queue
+    REJECT = "reject"  # can never fit on any device (P + E > max C)
+
+
+@dataclass(frozen=True)
+class PlacementEvent:
+    """One entry of the placement decision log. ``ordinal`` is the job's
+    submission index, so traces with duplicate names cannot alias."""
+
+    kind: PlacementEventKind
+    time: float
+    ordinal: int
+    name: str
+    device_id: Optional[int]  # None for QUEUE / REJECT
+
+
+@dataclass
+class PlacementPlan:
+    """Output of :meth:`Placer.place`: every submitted job is placed on
+    exactly one device or rejected, with the full decision log."""
+
+    n_devices: int
+    assignments: Dict[int, int]  # job_id -> device_id
+    rejected: set
+    events: List[PlacementEvent] = field(default_factory=list)
+
+    def device_jobs(
+        self,
+        jobs: Sequence[JobSpec],
+        route_rejected_to: Optional[int] = None,
+    ) -> List[List[JobSpec]]:
+        """Per-device job lists in original submission order — device
+        engines must see arrivals in trace order, not placement order, for
+        bitwise reproducibility against a single-device run.
+
+        ``route_rejected_to`` submits cluster-rejected jobs to that device
+        anyway: its own admission control rejects them identically (their
+        P + E exceeds every capacity), which keeps per-job stats and the
+        device decision log in one-to-one correspondence with a bare
+        single-device run of the same trace."""
+        out: List[List[JobSpec]] = [[] for _ in range(self.n_devices)]
+        for job in jobs:
+            dev = self.assignments.get(job.job_id)
+            if dev is None and job.job_id in self.rejected:
+                dev = route_rejected_to
+            if dev is not None:
+                out[dev].append(job)
+        return out
+
+    def decision_log(self) -> List[tuple]:
+        """(kind, submission-ordinal, name, device_id) projection, the
+        time-free form compared across engines."""
+        return [(e.kind.value, e.ordinal, e.name, e.device_id) for e in self.events]
+
+
+class _DeviceModel:
+    """Shadow admission/load model of one device — no simulation, just the
+    byte-exact lane safety condition plus a work-conserving queue model."""
+
+    def __init__(self, device_id: int, capacity: int):
+        self.device_id = device_id
+        self.capacity = int(capacity)
+        self.registry = LaneRegistry(self.capacity)
+        # byte reasoning only: reuses MemoryManager._bytes_needed verbatim
+        self._mm = MemoryManager(self.registry)
+        self.busy_until = 0.0  # work-conserving: placed seconds drain FIFO
+
+    def admits(self, job: JobSpec) -> bool:
+        """Would some FINDLANE strategy admit ``job`` right now, given the
+        jobs modeled resident?"""
+        if job.profile.total > self.capacity:
+            return False
+        return self._mm._bytes_needed(job) == 0
+
+    def place(self, job: JobSpec, now: float) -> float:
+        """Bind ``job``; returns its modeled retirement time."""
+        lane = self.registry.job_arrive(job)
+        assert lane is not None, "place() without a passing admits() check"
+        self.busy_until = max(self.busy_until, now) + job.total_work
+        return self.busy_until
+
+    def retire(self, job: JobSpec) -> None:
+        self.registry.job_finish(job)
+
+    def outstanding(self, now: float) -> float:
+        return max(0.0, self.busy_until - now)
+
+    @property
+    def free_bytes(self) -> int:
+        return (
+            self.capacity
+            - self.registry.persistent_used
+            - self.registry.lane_total
+        )
+
+    @property
+    def occupied(self) -> bool:
+        return bool(self.registry.assignment)
+
+
+class Placer:
+    """Assign every job in a trace to a device (or reject it), honoring
+    the per-device lane safety condition at every binding."""
+
+    def __init__(
+        self,
+        n_devices: int,
+        capacity: Union[int, Sequence[int]],
+        strategy: Union[str, PlacementStrategy] = PlacementStrategy.LEAST_LOADED,
+        deficit_quantum: Optional[int] = None,
+    ):
+        if n_devices < 1:
+            raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+        if isinstance(capacity, (int, float)):
+            capacities = [int(capacity)] * n_devices
+        else:
+            capacities = [int(c) for c in capacity]
+            if len(capacities) != n_devices:
+                raise ValueError(
+                    f"{len(capacities)} capacities for n_devices={n_devices}"
+                )
+        self.n_devices = n_devices
+        self.capacities = capacities
+        self.strategy = get_strategy(strategy)
+        self.deficit_quantum = deficit_quantum
+
+    # ------------------------------------------------------------------
+
+    def _choose(
+        self, devices: List[_DeviceModel], job: JobSpec, now: float
+    ) -> Optional[_DeviceModel]:
+        fits = [d for d in devices if d.admits(job)]
+        if not fits:
+            return None
+        if self.strategy is PlacementStrategy.LEAST_LOADED:
+            key = lambda d: (d.outstanding(now), d.device_id)
+        elif self.strategy is PlacementStrategy.BEST_FIT:
+            key = lambda d: (d.free_bytes, d.device_id)
+        else:  # CONSOLIDATE: occupied and fullest first; open devices last
+            key = lambda d: (not d.occupied, d.free_bytes, d.device_id)
+        return min(fits, key=key)
+
+    def place(self, jobs: Sequence[JobSpec]) -> PlacementPlan:
+        devices = [
+            _DeviceModel(i, cap) for i, cap in enumerate(self.capacities)
+        ]
+        order = {j.job_id: i for i, j in enumerate(jobs)}
+        plan = PlacementPlan(self.n_devices, assignments={}, rejected=set())
+        pending: List[JobSpec] = []
+        deficit: Dict[int, int] = {}
+        seq = itertools.count()
+        retire_heap: List[tuple] = []  # (est_finish, seq, device_id, job)
+        max_cap = max(self.capacities) if self.capacities else 0
+
+        def quantum(job: JobSpec) -> int:
+            q = self.deficit_quantum
+            return q if q is not None else job.profile.total
+
+        def bind(job: JobSpec, now: float, kind: PlacementEventKind) -> bool:
+            dev = self._choose(devices, job, now)
+            if dev is None:
+                return False
+            est = dev.place(job, now)
+            heapq.heappush(retire_heap, (est, next(seq), dev.device_id, job))
+            plan.assignments[job.job_id] = dev.device_id
+            plan.events.append(
+                PlacementEvent(kind, now, order[job.job_id], job.name, dev.device_id)
+            )
+            deficit.pop(job.job_id, None)
+            return True
+
+        def retry(now: float) -> None:
+            # the cluster-level second chance: accrue deficit for every job
+            # denied placement this round, retry highest-deficit-first
+            # (FIFO within ties), exactly like MemoryManager's boundary tick
+            if not pending:
+                return
+            for j in pending:
+                deficit[j.job_id] = deficit.get(j.job_id, 0) + quantum(j)
+            pending.sort(key=lambda j: (-deficit[j.job_id], order[j.job_id]))
+            for j in list(pending):
+                if bind(j, now, PlacementEventKind.SECOND_CHANCE):
+                    pending.remove(j)
+
+        def drain_until(now: float) -> None:
+            while retire_heap and retire_heap[0][0] <= now:
+                est, _, dev_id, job = heapq.heappop(retire_heap)
+                devices[dev_id].retire(job)
+                retry(est)
+
+        arrivals = sorted(jobs, key=lambda j: (j.arrival_time, order[j.job_id]))
+        for job in arrivals:
+            now = job.arrival_time
+            drain_until(now)
+            if job.profile.total > max_cap:
+                plan.rejected.add(job.job_id)
+                plan.events.append(
+                    PlacementEvent(
+                        PlacementEventKind.REJECT, now, order[job.job_id], job.name, None
+                    )
+                )
+                continue
+            if not bind(job, now, PlacementEventKind.PLACE):
+                pending.append(job)
+                deficit.setdefault(job.job_id, 0)
+                plan.events.append(
+                    PlacementEvent(
+                        PlacementEventKind.QUEUE, now, order[job.job_id], job.name, None
+                    )
+                )
+        # flush: keep retiring modeled work until the pending queue drains
+        # (an empty device admits anything with P + E <= its capacity, so
+        # every non-rejected job binds eventually)
+        while pending and retire_heap:
+            est, _, dev_id, job = heapq.heappop(retire_heap)
+            devices[dev_id].retire(job)
+            retry(est)
+        if pending:
+            names = [j.name for j in pending]
+            raise RuntimeError(f"unplaceable jobs after full drain: {names}")
+        return plan

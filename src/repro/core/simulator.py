@@ -32,6 +32,7 @@ from repro.core.types import (
     JobStats,
     MemoryEvent,
     MemoryEventKind,
+    percentile,
 )
 
 
@@ -69,8 +70,9 @@ class SimResult:
 
     @property
     def p95_jct(self) -> float:
-        v = sorted(self.jcts)
-        return v[int(0.95 * (len(v) - 1))] if v else 0.0
+        # nearest-rank, shared with JobStats/benchmarks via types.percentile
+        v = percentile(self.jcts, 0.95)
+        return 0.0 if v is None else v
 
     @property
     def avg_queuing(self) -> float:
@@ -128,6 +130,7 @@ class Simulator:
         last_on_device: Dict[int, int] = {}  # lane_id -> job_id (switch detection)
         transfer_delay: Dict[int, float] = {}  # job_id -> pending paging seconds
         pending_out_cost = [0.0]  # page-out time owed by the next admission
+        last_ran = [None]  # job_id whose iteration just ended (unfinished only)
         seq = itertools.count()
         events: List[_Event] = []
         now = 0.0
@@ -164,8 +167,6 @@ class Simulator:
             st = stats[job.job_id]
             if st.first_run_time is None:
                 st.first_run_time = now
-            if state[job.job_id] == JobState.PAUSED:
-                st.preemptions += 0  # counted when paused
             state[job.job_id] = JobState.RUNNING
             overhead = 0.0
             # switch detection: device-wide for exclusive policies, per-lane
@@ -195,13 +196,25 @@ class Simulator:
                 job = policy.select(ready, stats, now, blocked=frozenset(reg.paged))
                 if job is not None:
                     lane = reg.assignment[job.job_id]
-                    # mark preemption of jobs that were mid-stream and lost
-                    for other in ready:
-                        if other is not job and stats[other.job_id].iterations_done:
-                            if state[other.job_id] != JobState.PAUSED:
-                                state[other.job_id] = JobState.PAUSED
-                                stats[other.job_id].preemptions += 1
+                    # genuine preemption = running -> paused displacement:
+                    # only the job whose iteration just ended, still wanting
+                    # the device (it is a candidate), loses the pick to
+                    # another job. Bystanders merely waiting their turn are
+                    # not preempted and stay READY.
+                    prev = last_ran[0]
+                    if (
+                        prev is not None
+                        and prev != job.job_id
+                        and any(o.job_id == prev for o in ready)
+                    ):
+                        state[prev] = JobState.PAUSED
+                        stats[prev].preemptions += 1
                     start_iteration(lane, job)
+                else:
+                    # device going idle: the previous runner yielded with
+                    # nothing runnable, so whatever runs after the gap
+                    # displaces no one
+                    last_ran[0] = None
                 return
             for lane in list(reg.lanes.values()):
                 if lane.lane_id in running_iter:
@@ -282,18 +295,24 @@ class Simulator:
                 if st.iterations_done >= job.n_iters:
                     state[job.job_id] = JobState.FINISHED
                     st.finish_time = now
+                    last_ran[0] = None
                     mm.job_finish(job, now, busy())  # frees lane / admits queued
                 else:
                     state[job.job_id] = JobState.READY
+                    last_ran[0] = job.job_id
                 # second-chance tick: re-admit / page at the boundary
                 mm.iteration_boundary(now, busy())
             return True
 
         while events:
+            if until is not None and events[0].time > until:
+                # horizon reached: clamp the clock to the horizon instead of
+                # letting it (and makespan / final-sweep bookkeeping) reflect
+                # a timestamp past ``until``
+                now = until
+                break
             ev = heapq.heappop(events)
             now = ev.time
-            if until is not None and now > until:
-                break
             live = handle(ev)
             # drain every simultaneous event before scheduling: a batch of
             # same-instant arrivals must all be visible to the policy before

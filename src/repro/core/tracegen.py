@@ -55,6 +55,36 @@ def generate_trace(
     return jobs
 
 
+def cluster_trace(
+    n_devices: int = 4,
+    jobs_per_device: int = 25,
+    seed: int = 42,
+    mean_interarrival: float = 120.0,
+    short_frac: float = 0.7,
+    short_duration: float = 90.0,
+    long_duration: float = 2700.0,
+    names: Optional[List[str]] = None,
+) -> List[JobSpec]:
+    """Table-2-style mixed trace scaled to an ``n_devices`` fleet (paper
+    §5.1 cluster regime): ``n_devices * jobs_per_device`` jobs from the
+    same heavy-tailed duration mixture, with the Poisson arrival rate
+    scaled linearly in the fleet size — a bigger cluster serves
+    proportionally more submissions, so per-device pressure stays in the
+    single-GPU regime the Fig. 5/6 comparison assumes. Deterministic in
+    the seed; an N=1 trace is exactly ``generate_trace``'s."""
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    return generate_trace(
+        n_jobs=n_devices * jobs_per_device,
+        seed=seed,
+        mean_interarrival=mean_interarrival / n_devices,
+        short_frac=short_frac,
+        short_duration=short_duration,
+        long_duration=long_duration,
+        names=names,
+    )
+
+
 def poisson_arrivals(rps: float, duration: float, rng: random.Random) -> List[float]:
     """Poisson arrival times over [0, duration); an idle stream still gets
     one probe request. Shared by ``request_trace`` and the live serve

@@ -163,6 +163,9 @@ class MemoryEvent:
     lane_id: Optional[int] = None
     nbytes: int = 0
     cost: float = 0.0
+    # arrival ordinal within the owning MemoryManager, stamped at log time
+    # so the decision log stays stable after per-job bookkeeping is dropped
+    ordinal: Optional[int] = None
 
     @property
     def name(self) -> Optional[str]:

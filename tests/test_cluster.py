@@ -1,0 +1,243 @@
+"""Cluster/placement unit + invariant tests (ISSUE 4 tentpole).
+
+Covers: strategy selection semantics (least-loaded spreads, best-fit
+packs bytes-tight, consolidate keeps whole devices free), cluster-level
+queue-and-retry with deficit ordering, the placed-or-queued-or-rejected-
+exactly-once invariant, no overcommit at admission (shadow registries
+enforce the lane safety condition at every binding), cluster_trace
+scaling/determinism, and ClusterResult aggregation.
+"""
+import pytest
+
+from repro.core import (
+    GB,
+    MB,
+    Cluster,
+    JobSpec,
+    MemoryProfile,
+    Placer,
+    PlacementStrategy,
+    Simulator,
+    get_policy,
+    get_strategy,
+    percentile,
+)
+from repro.core.placement import PlacementEventKind
+from repro.core.tracegen import cluster_trace, generate_trace
+
+
+def job(name, p_gb, e_gb, n_iters=10, iter_time=1.0, arrival=0.0, util=0.9):
+    return JobSpec(
+        name=name,
+        profile=MemoryProfile(int(p_gb * GB), int(e_gb * GB)),
+        n_iters=n_iters,
+        iter_time=iter_time,
+        arrival_time=arrival,
+        utilization=util,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Strategy selection
+# ---------------------------------------------------------------------------
+
+
+def test_get_strategy_accepts_names_and_enums():
+    assert get_strategy("best_fit") is PlacementStrategy.BEST_FIT
+    assert get_strategy(PlacementStrategy.CONSOLIDATE) is PlacementStrategy.CONSOLIDATE
+    with pytest.raises(KeyError):
+        get_strategy("round_robin")
+
+
+def test_least_loaded_spreads_best_fit_and_consolidate_pack():
+    """4 small co-arriving jobs on a 4-device fleet: least-loaded uses all
+    devices, best-fit/consolidate pack the occupied one."""
+    mk = lambda: [job(f"j{i}", 0.5, 1.0) for i in range(4)]
+    spread = Placer(4, 16 * GB, "least_loaded").place(mk())
+    assert sorted(spread.assignments.values()) == [0, 1, 2, 3]
+    for strat in ("best_fit", "consolidate"):
+        packed = Placer(4, 16 * GB, strat).place(mk())
+        assert set(packed.assignments.values()) == {0}, strat
+
+
+def test_best_fit_prefers_tightest_byte_fit():
+    """A big resident on d0 makes d0 the tighter (but still admitting)
+    fit; least-loaded prefers the idle d1 instead."""
+    mk = lambda: [job("big", 1.0, 6.0, arrival=0.0), job("small", 1.0, 1.0, arrival=0.0)]
+    bf = Placer(2, 10 * GB, "best_fit").place(mk())
+    jobs = mk()
+    ll = Placer(2, 10 * GB, "least_loaded").place(jobs)
+    assert list(bf.assignments.values()) == [0, 0]
+    assert ll.assignments[jobs[0].job_id] == 0
+    assert ll.assignments[jobs[1].job_id] == 1
+
+
+def test_consolidate_keeps_whole_devices_free():
+    """Fig. 12 packing regime: a light trace stays on one device under
+    CONSOLIDATE while LEAST_LOADED spreads it."""
+    mk = lambda: [job(f"j{i}", 0.2, 0.8, n_iters=5) for i in range(6)]
+    co = Cluster(4, 16 * GB, "srtf", strategy="consolidate").run(mk())
+    ll = Cluster(4, 16 * GB, "srtf", strategy="least_loaded").run(mk())
+    assert co.devices_used == 1
+    assert ll.devices_used == 4
+    assert co.completed == ll.completed == 6
+
+
+# ---------------------------------------------------------------------------
+# Queue-and-retry + rejection
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_queue_and_retry_deficit_ordered():
+    """Two jobs that cannot co-reside with the resident queue at the
+    cluster level; the retry is deficit-ordered (quantum = P + E), so the
+    *larger* pending job is re-tried first even though it arrived later."""
+    resident = job("res", 1.0, 8.0, n_iters=5, iter_time=1.0, arrival=0.0)
+    b = job("b", 0.5, 9.0, arrival=1.0)  # total 9.5 GB, queues behind res
+    s = job("s", 1.5, 8.5, arrival=2.0)  # total 10 GB, queues; larger deficit
+    plan = Placer(1, 10 * GB, "least_loaded").place([resident, b, s])
+    kinds = [(e.kind, e.name) for e in plan.events]
+    assert (PlacementEventKind.QUEUE, "b") in kinds
+    assert (PlacementEventKind.QUEUE, "s") in kinds
+    seconds = [e.name for e in plan.events if e.kind is PlacementEventKind.SECOND_CHANCE]
+    assert seconds == ["s", "b"]  # deficit order, not FIFO
+    assert set(plan.assignments) == {resident.job_id, b.job_id, s.job_id}
+
+
+def test_placed_or_queued_or_rejected_exactly_once():
+    """Every job gets exactly one terminal placement decision; QUEUE
+    entries always resolve to a later SECOND_CHANCE."""
+    for strat in ("least_loaded", "best_fit", "consolidate"):
+        for seed in (0, 1, 2):
+            jobs = generate_trace(n_jobs=30, seed=seed, mean_interarrival=20.0)
+            plan = Placer(3, 16 * GB, strat).place(jobs)
+            terminal = {}
+            queued = set()
+            for e in plan.events:
+                if e.kind is PlacementEventKind.QUEUE:
+                    queued.add(e.ordinal)
+                    continue
+                assert e.ordinal not in terminal, (strat, seed, e)
+                terminal[e.ordinal] = e.kind
+            assert len(terminal) == len(jobs)
+            for o in queued:
+                assert terminal[o] is PlacementEventKind.SECOND_CHANCE
+            # partition: assignments and rejected cover the trace disjointly
+            assert set(plan.assignments) | plan.rejected == {j.job_id for j in jobs}
+            assert not (set(plan.assignments) & plan.rejected)
+
+
+def test_no_device_overcommit_at_admission():
+    """Placed jobs always satisfy the per-device lane safety condition;
+    the per-device engines (which check invariants at every event) accept
+    the plan without a SafetyViolation, and nothing placed exceeds its
+    device's capacity."""
+    jobs = generate_trace(n_jobs=40, seed=5, mean_interarrival=10.0)
+    cluster = Cluster(3, 16 * GB, "srtf", strategy="best_fit")
+    res = cluster.run(jobs)  # SafetyViolation would propagate
+    for j in jobs:
+        dev = res.plan.assignments.get(j.job_id)
+        if dev is not None:
+            assert j.profile.total <= cluster.placer.capacities[dev]
+    assert res.completed == len(jobs) - len(res.plan.rejected)
+
+
+def test_infeasible_job_rejected_once_and_in_engine():
+    """A P + E > C job is rejected in the placement log AND transits the
+    sink device's admission control (uniform per-job stats)."""
+    toobig = job("toobig", 4.0, 14.0)  # 18 GB > 16 GB
+    ok = job("ok", 1.0, 2.0)
+    res = Cluster(2, 16 * GB, "fifo", strategy="least_loaded").run([toobig, ok])
+    assert res.plan.rejected == {toobig.job_id}
+    rejects = [e for e in res.plan.events if e.kind is PlacementEventKind.REJECT]
+    assert [e.name for e in rejects] == ["toobig"]
+    assert res.stats[toobig.job_id].rejected
+    assert res.stats[toobig.job_id].finish_time is None
+    assert res.summary()["rejected"] == 1
+    assert res.summary()["completed"] == 1
+
+
+def test_heterogeneous_capacities_route_big_jobs():
+    """A job only the big device can hold lands there under every
+    strategy."""
+    for strat in ("least_loaded", "best_fit", "consolidate"):
+        big = job("big", 2.0, 10.0)  # 12 GB: only fits the 16 GB device
+        plan = Placer(2, [8 * GB, 16 * GB], strat).place([big])
+        assert plan.assignments[big.job_id] == 1, strat
+
+
+def test_placer_validates_arguments():
+    with pytest.raises(ValueError):
+        Placer(0, 16 * GB)
+    with pytest.raises(ValueError):
+        Placer(2, [16 * GB])
+
+
+# ---------------------------------------------------------------------------
+# cluster_trace
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_trace_is_deterministic_and_scales():
+    a = cluster_trace(4, jobs_per_device=10, seed=9)
+    b = cluster_trace(4, jobs_per_device=10, seed=9)
+    assert [(j.name, j.arrival_time, j.n_iters) for j in a] == [
+        (j.name, j.arrival_time, j.n_iters) for j in b
+    ]
+    assert len(a) == 40
+    # arrival rate scales with the fleet: the 4-device trace packs 4x the
+    # jobs into a comparable horizon, not a 4x-longer one
+    solo = cluster_trace(1, jobs_per_device=10, seed=9)
+    assert len(solo) == 10
+    assert max(j.arrival_time for j in a) < 2.5 * max(j.arrival_time for j in solo)
+    with pytest.raises(ValueError):
+        cluster_trace(0)
+
+
+def test_cluster_trace_n1_equals_generate_trace():
+    one = cluster_trace(1, jobs_per_device=15, seed=3)
+    ref = generate_trace(n_jobs=15, seed=3)
+    assert [(j.name, j.arrival_time, j.n_iters) for j in one] == [
+        (j.name, j.arrival_time, j.n_iters) for j in ref
+    ]
+
+
+# ---------------------------------------------------------------------------
+# ClusterResult aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_result_aggregates_fleet_jcts():
+    jobs = [job(f"j{i}", 0.5, 1.0, n_iters=5, iter_time=1.0) for i in range(8)]
+    res = Cluster(2, 16 * GB, "fifo", strategy="least_loaded").run(jobs)
+    assert res.completed == 8
+    assert len(res.jcts) == 8
+    assert res.avg_jct == pytest.approx(sum(res.jcts) / 8)
+    assert res.p95_jct == percentile(res.jcts, 0.95)
+    assert res.makespan == max(r.makespan for r in res.device_results)
+    utils = res.per_device_utilization
+    assert len(utils) == 2 and all(0.0 <= u <= 1.0 + 1e-9 for u in utils)
+    s = res.summary()
+    assert s["n_devices"] == 2 and s["n_jobs"] == 8 and s["placed"] == 8
+    assert len(res.placement_log()) == 8
+
+
+def test_cluster_until_clamps_every_device():
+    """The horizon is fleet-wide: no device reports bookkeeping past it."""
+    jobs = generate_trace(n_jobs=12, seed=2, mean_interarrival=30.0)
+    res = Cluster(2, 16 * GB, "srtf").run(jobs, until=200.0)
+    assert res.makespan <= 200.0
+    for r in res.device_results:
+        assert r.makespan <= 200.0
+        for rec in r.records:
+            assert rec.end <= 200.0
+
+
+def test_cluster_sharing_beats_fifo_exclusive_fleet():
+    """The Fig. 5/6 headline at test scale: Salus SRTF sharing on each GPU
+    improves fleet avg JCT over the FIFO one-job-per-GPU baseline."""
+    mk = lambda: cluster_trace(4, jobs_per_device=5, seed=42)
+    fifo = Cluster(4, 16 * GB, "fifo").run(mk())
+    srtf = Cluster(4, 16 * GB, "srtf").run(mk())
+    assert fifo.completed == srtf.completed == 20
+    assert fifo.avg_jct / srtf.avg_jct > 1.0

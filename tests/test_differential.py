@@ -37,6 +37,8 @@ import pytest
 
 from repro.core import (
     GB,
+    Cluster,
+    ClusterExecutor,
     JobSpec,
     MemoryConfig,
     MemoryProfile,
@@ -373,6 +375,92 @@ def test_priority_openloop_inference_preempts_at_boundaries():
     for j in jobs:
         if j.kind == "inference" and not sres.stats[j.job_id].rejected:
             assert sres.stats[j.job_id].iterations_done == j.n_iters
+
+
+# ---------------------------------------------------------------------------
+# Cluster differentials: N=1 == bare engine; fleet sim == fleet executor
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "policy,seed",
+    [(p, s) for p in ("fifo", "srtf") for s in range(5)],
+)
+def test_n1_cluster_bitwise_identical_to_bare_simulator(policy, seed):
+    """An N=1 Cluster is the bare Simulator: identical decision log,
+    iteration ordering, and JCTs on the same seeded trace (placement
+    binds every job to device 0 with its original arrival time)."""
+    mk = lambda: generate_trace(n_jobs=12, seed=seed)
+    jobs_bare = mk()
+    bare = Simulator(CAP, get_policy(policy), memory=MemoryConfig()).run(jobs_bare)
+    jobs_clus = mk()
+    clus = Cluster(1, CAP, policy, strategy="least_loaded").run(jobs_clus)
+    dev0 = clus.device_results[0]
+    assert bare.decision_log == dev0.decision_log
+    nb = {j.job_id: j.name for j in jobs_bare}
+    nc = {j.job_id: j.name for j in jobs_clus}
+    assert [(nb[r.job_id], r.index, r.lane_id) for r in bare.records] == [
+        (nc[r.job_id], r.index, r.lane_id) for r in dev0.records
+    ]
+    assert sorted((nb[j], s.jct) for j, s in bare.stats.items()) == sorted(
+        (nc[j], s.jct) for j, s in clus.stats.items()
+    )
+    assert bare.makespan == clus.makespan
+    # every job got exactly one placement decision, all on device 0
+    assert set(clus.plan.assignments.values()) <= {0}
+    assert len(clus.plan.assignments) + len(clus.plan.rejected) == 12
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_cluster_executor_mirrors_cluster_simulator(seed):
+    """The live fleet differential: a 2-device ClusterExecutor under
+    nominal accounting reproduces the cluster simulator's placement log
+    and every device's decision log on the same trace."""
+    specs = diff_specs(seed, max_iters=4)
+    jobs = [
+        JobSpec(
+            name=s["name"], profile=s["profile"], n_iters=s["n_iters"],
+            iter_time=s["iter_time"], utilization=1.0, arrival_time=0.0,
+        )
+        for s in specs
+    ]
+    csim = Cluster(2, CAP, "srtf", strategy="least_loaded",
+                   memory=MemoryConfig(**MEMCFG)).run(jobs)
+
+    cex = ClusterExecutor(2, CAP, "srtf", strategy="least_loaded",
+                          memory=MemoryConfig(**MEMCFG), accounting="nominal")
+    for s in specs:
+        it = s["iter_time"]
+
+        def step(state, batch, _t=it):
+            time.sleep(_t)  # stand-in for a real device iteration
+            return state
+
+        cex.submit(
+            Session(
+                s["name"], step, jnp.zeros((4,), jnp.float32), lambda i: None,
+                s["n_iters"], profile=s["profile"], iter_time=it,
+                utilization=1.0, arrival_time=0.0,
+            )
+        )
+    rep = cex.run()
+    assert csim.placement_log() == rep.placement_log()
+    for dev in range(2):
+        assert (
+            csim.device_results[dev].decision_log
+            == rep.device_reports[dev].decision_log
+        ), f"device {dev} decision logs diverged"
+    # fleet-level completion parity
+    sim_done = {
+        csim.jobs[j].name for j, st in csim.stats.items() if st.finish_time is not None
+    }
+    exec_names = {
+        jid: sess.name for ex in cex.executors for jid, sess in ex.sessions.items()
+    }
+    exec_done = {
+        exec_names[j] for j, st in rep.stats.items() if st.finish_time is not None
+    }
+    assert sim_done == exec_done
 
 
 def test_executor_real_paging_moves_session_state():
