@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import base_parser, emit, write_json
 from repro.core import GB, Cluster, MemoryConfig
 from repro.core.tracegen import cluster_trace
 
@@ -33,13 +33,14 @@ def run(
     strategy: str = "least_loaded",
     policies=("srtf", "fair", "pack"),
     paging: bool = False,
+    page_bandwidth: float = 12 * GB,
     fast: bool = False,
 ):
     if fast:
         jobs_per_device = min(jobs_per_device, 5)
     capacity = int(capacity_gb * GB)
     mk = lambda: cluster_trace(n_devices, jobs_per_device=jobs_per_device, seed=seed)
-    memcfg = lambda: MemoryConfig(paging=paging)
+    memcfg = lambda: MemoryConfig(paging=paging, page_bandwidth=page_bandwidth)
 
     results = {}
     for pol in ("fifo",) + tuple(policies):
@@ -89,13 +90,10 @@ def run(
 
 def main(argv=None):
     import argparse
-    import json
-    from pathlib import Path
 
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(description=__doc__, parents=[base_parser(seed=42)])
     ap.add_argument("--n-devices", type=int, default=4, help="fleet size")
     ap.add_argument("--jobs-per-device", type=int, default=25)
-    ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--capacity-gb", type=float, default=16.0, help="per-device memory")
     ap.add_argument(
         "--strategy",
@@ -103,15 +101,6 @@ def main(argv=None):
         choices=("least_loaded", "best_fit", "consolidate"),
         help="placement strategy for the policy comparison",
     )
-    ap.add_argument(
-        "--paging",
-        action="store_true",
-        help="enable fungible-memory host paging on every device",
-    )
-    ap.add_argument(
-        "--fast", action="store_true", help="smoke scale (5 jobs per device)"
-    )
-    ap.add_argument("--json", default=None, help="write per-policy summaries here")
     args = ap.parse_args(argv)
     results = run(
         n_devices=args.n_devices,
@@ -120,13 +109,10 @@ def main(argv=None):
         capacity_gb=args.capacity_gb,
         strategy=args.strategy,
         paging=args.paging,
+        page_bandwidth=args.page_bandwidth_gbs * GB,
         fast=args.fast,
     )
-    if args.json:
-        out = Path(args.json)
-        out.parent.mkdir(parents=True, exist_ok=True)
-        out.write_text(json.dumps(results, indent=2, default=float))
-        print(f"wrote {out}")
+    write_json(args.json, results)
 
 
 if __name__ == "__main__":

@@ -19,7 +19,7 @@ Two sections:
 """
 from __future__ import annotations
 
-from benchmarks.common import emit
+from benchmarks.common import base_parser, emit, write_json
 from repro.core import GB, MemoryConfig, Simulator, get_policy
 from repro.core.tracegen import generate_trace
 
@@ -143,10 +143,10 @@ def run(
 
 def main(argv=None):
     import argparse
-    import json
-    from pathlib import Path
 
-    ap = argparse.ArgumentParser(description=__doc__)
+    # --paging from the shared parent is a no-op here: the overcommit
+    # scenario always sweeps paging off AND on (that comparison is the bench)
+    ap = argparse.ArgumentParser(description=__doc__, parents=[base_parser(seed=7)])
     ap.add_argument(
         "--overcommit-factor",
         type=float,
@@ -154,17 +154,6 @@ def main(argv=None):
         help="aggregate demand / device capacity for the Fig. 7 scenario",
     )
     ap.add_argument("--n-jobs", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=7)
-    ap.add_argument(
-        "--page-bandwidth-gbs",
-        type=float,
-        default=12.0,
-        help="modeled host-link bandwidth (GB/s) for paging transfer costs",
-    )
-    ap.add_argument(
-        "--fast", action="store_true", help="skip the compile-heavy taxonomy section"
-    )
-    ap.add_argument("--json", default=None, help="write overcommit summaries here")
     args = ap.parse_args(argv)
     results = run(
         overcommit_factor=args.overcommit_factor,
@@ -173,11 +162,7 @@ def main(argv=None):
         seed=args.seed,
         page_bandwidth=args.page_bandwidth_gbs * GB,
     )
-    if args.json:
-        out = Path(args.json)
-        out.parent.mkdir(parents=True, exist_ok=True)
-        out.write_text(json.dumps(results, indent=2, default=float))
-        print(f"wrote {out}")
+    write_json(args.json, results)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,253 @@
+"""Live migration + defrag-by-migration: the Rebalancer earning its keep.
+
+Three fleet scenarios, all driven through :class:`Cluster` with migration
+passes at ``rebalance_interval`` boundaries:
+
+1. ``defrag`` (headline) — a fragmentation-by-churn trace
+   (``tracegen.churn_trace``): long+short couples fill most of each device;
+   when the shorts drain the fleet is fragmented — one long straggler per
+   device, none leaving room for a late "big" job, so arrival-only
+   CONSOLIDATE placement must open a fresh device for it. The consolidate
+   Rebalancer instead merges the stragglers at an epoch boundary and the
+   pending re-placement amendment lands "big" on a freed device:
+   ``devices_used`` shrinks strictly, and the migrated straggler's JCT
+   carries the modeled P/page-bandwidth transfer cost.
+
+2. ``imbalance`` — CONSOLIDATE arrival placement packs four contending
+   training jobs onto one device (memory-optimal, throughput-awful: the
+   PACK dilation factor is the sum of utilizations). A telemetry-aware
+   ``mode="rebalance"`` pass sees the measured dilation and spreads the
+   fleet until the load gap closes, cutting avg JCT roughly in half.
+
+3. ``drain`` — ``Rebalancer(drain={0})`` evacuates device 0 at the first
+   boundary (maintenance regime): zero iterations run there afterwards and
+   every job still completes, on the surviving device.
+
+``--json`` writes the per-scenario summaries (tracked by CI as the
+bench-migration-smoke artifact); ``--fast`` shrinks iteration counts and
+boundaries proportionally.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import base_parser, emit, write_json
+from repro.core import GB, Cluster, JobSpec, MemoryConfig, MemoryProfile, Rebalancer
+from repro.core.tracegen import churn_trace
+
+
+def defrag(
+    seed: int = 42,
+    n_devices: int = 3,
+    capacity_gb: float = 16.0,
+    paging: bool = False,
+    page_bandwidth: float = 12 * GB,
+    fast: bool = False,
+):
+    """Arrival-only CONSOLIDATE vs CONSOLIDATE + migration on the churn
+    trace. Returns both summaries plus the headline deltas."""
+    capacity = int(capacity_gb * GB)
+    scale = 4 if fast else 1
+    interval = 200.0 / scale
+    mk = lambda: churn_trace(
+        n_devices=n_devices,
+        seed=seed,
+        capacity=capacity,
+        long_iters=2000 // scale,
+        short_iters=150 // scale,
+        big_arrival=300.0 / scale,
+        big_iters=max(10, 50 // scale),
+    )
+    memcfg = lambda: MemoryConfig(paging=paging, page_bandwidth=page_bandwidth)
+
+    t0 = time.perf_counter()
+    arrival = Cluster(
+        n_devices, capacity, "pack", strategy="consolidate", memory=memcfg()
+    ).run(mk())
+    rebalanced = Cluster(
+        n_devices,
+        capacity,
+        "pack",
+        strategy="consolidate",
+        memory=memcfg(),
+        rebalancer=Rebalancer(mode="consolidate"),
+        rebalance_interval=interval,
+    ).run(mk())
+    sim_us = (time.perf_counter() - t0) * 1e6
+
+    a, r = arrival.summary(), rebalanced.summary()
+    moved_jcts = [
+        rebalanced.stats[m.job_id].jct
+        for m in rebalanced.migrations
+        if rebalanced.stats[m.job_id].jct is not None
+    ]
+    results = {
+        "arrival_only": a,
+        "rebalanced": r,
+        "migrations": len(rebalanced.migrations),
+        "migration_log": rebalanced.migration_log(),
+        "devices_freed": a["devices_used"] - r["devices_used"],
+        # migration cost shows up in the fleet JCTs (transfer = P / bandwidth
+        # charged on the migrated straggler's next iteration)
+        "avg_jct_delta": r["avg_jct"] - a["avg_jct"],
+        "migrated_job_jcts": moved_jcts,
+    }
+    emit(
+        "mig_defrag_consolidate",
+        sim_us,
+        f"devices_used={a['devices_used']}->{r['devices_used']};"
+        f"migrations={results['migrations']};"
+        f"completed={r['completed']}/{r['n_jobs']};"
+        f"avg_jct_delta_s={results['avg_jct_delta']:.2f}",
+    )
+    return results
+
+
+def imbalance(
+    seed: int = 42,
+    capacity_gb: float = 16.0,
+    paging: bool = False,
+    page_bandwidth: float = 12 * GB,
+    fast: bool = False,
+):
+    """Contention-drift: consolidate packs 4 contending jobs on one device;
+    the telemetry-aware rebalance pass spreads them once measured dilation
+    shows up. Returns packed vs rebalanced summaries + the JCT gain."""
+    capacity = int(capacity_gb * GB)
+    scale = 4 if fast else 1
+    n_iters, interval = 1200 // scale, 100.0 / scale
+    prof = MemoryProfile(int(0.10 * capacity), int(0.15 * capacity))
+    mk = lambda: [
+        JobSpec(
+            name=f"train{i}",
+            profile=prof,
+            n_iters=n_iters,
+            iter_time=1.0,
+            utilization=0.6,
+            arrival_time=0.0,
+        )
+        for i in range(4)
+    ]
+    memcfg = lambda: MemoryConfig(paging=paging, page_bandwidth=page_bandwidth)
+
+    packed = Cluster(
+        2, capacity, "pack", strategy="consolidate", memory=memcfg()
+    ).run(mk())
+    rebalanced = Cluster(
+        2,
+        capacity,
+        "pack",
+        strategy="consolidate",
+        memory=memcfg(),
+        rebalancer=Rebalancer(mode="rebalance", use_telemetry=True),
+        rebalance_interval=interval,
+    ).run(mk())
+    p, r = packed.summary(), rebalanced.summary()
+    gain = p["avg_jct"] / max(r["avg_jct"], 1e-9)
+    results = {
+        "packed": p,
+        "rebalanced": r,
+        "migrations": len(rebalanced.migrations),
+        "avg_jct_gain": gain,
+    }
+    emit(
+        "mig_rebalance_contention",
+        0.0,
+        f"avg_jct_s={p['avg_jct']:.0f}->{r['avg_jct']:.0f};gain={gain:.2f}x;"
+        f"migrations={results['migrations']};"
+        f"completed={r['completed']}/{r['n_jobs']}",
+    )
+    return results
+
+
+def drain(
+    seed: int = 42,
+    capacity_gb: float = 16.0,
+    paging: bool = False,
+    page_bandwidth: float = 12 * GB,
+    fast: bool = False,
+):
+    """Maintenance drain: evacuate device 0 at the first boundary; it runs
+    nothing afterwards and every job completes on the survivor."""
+    capacity = int(capacity_gb * GB)
+    scale = 4 if fast else 1
+    n_iters, interval = 400 // scale, 100.0 / scale
+    prof = MemoryProfile(int(0.10 * capacity), int(0.15 * capacity))
+    jobs = [
+        JobSpec(
+            name=f"job{i}",
+            profile=prof,
+            n_iters=n_iters,
+            iter_time=1.0,
+            utilization=0.4,
+            arrival_time=0.0,
+        )
+        for i in range(2)
+    ]
+    res = Cluster(
+        2,
+        capacity,
+        "pack",
+        strategy="least_loaded",
+        memory=MemoryConfig(paging=paging, page_bandwidth=page_bandwidth),
+        rebalancer=Rebalancer(mode="none", drain=(0,)),
+        rebalance_interval=interval,
+    ).run(jobs)
+    post_drain = sum(
+        1 for rec in res.device_results[0].records if rec.start > interval
+    )
+    s = res.summary()
+    results = {
+        "summary": s,
+        "migrations": len(res.migrations),
+        "post_drain_iters_on_drained": post_drain,
+    }
+    emit(
+        "mig_drain_device0",
+        0.0,
+        f"migrations={results['migrations']};"
+        f"post_drain_iters_on_drained={post_drain};"
+        f"completed={s['completed']}/{s['n_jobs']}",
+    )
+    return results
+
+
+def run(
+    seed: int = 42,
+    capacity_gb: float = 16.0,
+    paging: bool = False,
+    page_bandwidth: float = 12 * GB,
+    fast: bool = False,
+):
+    kw = dict(
+        seed=seed,
+        capacity_gb=capacity_gb,
+        paging=paging,
+        page_bandwidth=page_bandwidth,
+        fast=fast,
+    )
+    return {
+        "defrag": defrag(**kw),
+        "imbalance": imbalance(**kw),
+        "drain": drain(**kw),
+    }
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__, parents=[base_parser(seed=42)])
+    ap.add_argument("--capacity-gb", type=float, default=16.0, help="per-device memory")
+    args = ap.parse_args(argv)
+    results = run(
+        seed=args.seed,
+        capacity_gb=args.capacity_gb,
+        paging=args.paging,
+        page_bandwidth=args.page_bandwidth_gbs * GB,
+        fast=args.fast,
+    )
+    write_json(args.json, results)
+
+
+if __name__ == "__main__":
+    main()

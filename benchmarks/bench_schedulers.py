@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import base_parser, emit, write_json
 from repro.core import GB, MemoryConfig, Simulator, get_policy, percentile
 from repro.core.tracegen import generate_trace
 
@@ -17,7 +17,10 @@ def run(
     capacity_gb: float = 16.0,
     paging: bool = False,
     page_bandwidth: float = 12 * GB,
+    fast: bool = False,
 ):
+    if fast:
+        n_jobs = min(n_jobs, 20)
     capacity = int(capacity_gb * GB)
     memcfg = lambda: MemoryConfig(paging=paging, page_bandwidth=page_bandwidth)
     results = {}
@@ -54,25 +57,10 @@ def run(
 
 def main(argv=None):
     import argparse
-    import json
-    from pathlib import Path
 
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(description=__doc__, parents=[base_parser(seed=42)])
     ap.add_argument("--n-jobs", type=int, default=100)
-    ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--capacity-gb", type=float, default=16.0, help="device memory")
-    ap.add_argument(
-        "--paging",
-        action="store_true",
-        help="enable fungible-memory host paging (MemoryManager)",
-    )
-    ap.add_argument(
-        "--page-bandwidth-gbs",
-        type=float,
-        default=12.0,
-        help="modeled host-link bandwidth (GB/s) for paging transfer costs",
-    )
-    ap.add_argument("--json", default=None, help="write per-policy summaries to this path")
     args = ap.parse_args(argv)
     results = run(
         n_jobs=args.n_jobs,
@@ -80,12 +68,9 @@ def main(argv=None):
         capacity_gb=args.capacity_gb,
         paging=args.paging,
         page_bandwidth=args.page_bandwidth_gbs * GB,
+        fast=args.fast,
     )
-    if args.json:
-        out = Path(args.json)
-        out.parent.mkdir(parents=True, exist_ok=True)
-        out.write_text(json.dumps(results, indent=2, default=float))
-        print(f"wrote {out}")
+    write_json(args.json, results)
 
 
 if __name__ == "__main__":

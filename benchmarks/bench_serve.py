@@ -19,7 +19,7 @@ its own device — on three axes:
 """
 from __future__ import annotations
 
-from benchmarks.common import emit
+from benchmarks.common import base_parser, emit, write_json
 from repro.core import GB, MemoryConfig, Simulator, get_policy, percentile
 from repro.core.tracegen import request_trace
 
@@ -72,15 +72,18 @@ def run(
     train: str = "resnet50_25",
     policy: str = "priority",
     capacity_gb: float = 16.0,
+    paging: bool = False,
+    page_bandwidth: float = 12 * GB,
 ):
     capacity = int(capacity_gb * GB)
+    memcfg = lambda: MemoryConfig(paging=paging, page_bandwidth=page_bandwidth)
 
     # -- packed: N services + background training on ONE device ---------
     jobs = request_trace(
         n_services=n_services, seed=seed, rps=rps, duration=duration,
         train_background=train,
     )
-    packed = Simulator(capacity, get_policy(policy)).run(jobs)
+    packed = Simulator(capacity, get_policy(policy), memory=memcfg()).run(jobs)
     svc_lats = {
         packed.jobs[jid].name: s.request_latencies
         for jid, s in packed.stats.items()
@@ -98,11 +101,11 @@ def run(
     for job in request_trace(
         n_services=n_services, seed=seed, rps=rps, duration=duration
     ):
-        res = Simulator(capacity, get_policy(policy)).run([job])
+        res = Simulator(capacity, get_policy(policy), memory=memcfg()).run([job])
         st = list(res.stats.values())[0]
         excl_lats[job.name] = st.request_latencies
         excl_busy.append(_busy_fraction(res, duration))
-    solo = Simulator(capacity, get_policy(policy)).run(
+    solo = Simulator(capacity, get_policy(policy), memory=memcfg()).run(
         request_trace(
             n_services=0, seed=seed, rps=rps, duration=duration,
             train_background=train,
@@ -178,19 +181,14 @@ def run(
 
 def main(argv=None):
     import argparse
-    import json
-    from pathlib import Path
 
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(description=__doc__, parents=[base_parser(seed=11)])
     ap.add_argument("--services", type=int, default=6, help="co-resident services")
     ap.add_argument("--rps", type=float, default=2.0, help="requests/s per service")
     ap.add_argument("--duration", type=float, default=60.0, help="window (s)")
-    ap.add_argument("--seed", type=int, default=11)
     ap.add_argument("--train", default="resnet50_25", help="background workload")
     ap.add_argument("--policy", default="priority")
     ap.add_argument("--capacity-gb", type=float, default=16.0)
-    ap.add_argument("--fast", action="store_true", help="small window (CI smoke)")
-    ap.add_argument("--json", default=None, help="write the summary here")
     args = ap.parse_args(argv)
     if args.fast:
         args.services = min(args.services, 4)
@@ -203,12 +201,10 @@ def main(argv=None):
         train=args.train,
         policy=args.policy,
         capacity_gb=args.capacity_gb,
+        paging=args.paging,
+        page_bandwidth=args.page_bandwidth_gbs * GB,
     )
-    if args.json:
-        out = Path(args.json)
-        out.parent.mkdir(parents=True, exist_ok=True)
-        out.write_text(json.dumps(results, indent=2, default=float))
-        print(f"wrote {out}")
+    write_json(args.json, results)
 
 
 if __name__ == "__main__":

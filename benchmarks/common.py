@@ -1,13 +1,57 @@
-"""Shared benchmark utilities: CSV emission per the harness contract."""
+"""Shared benchmark utilities: CSV emission per the harness contract plus
+the common CLI surface every bench driver speaks.
+
+``base_parser`` is an ``add_help=False`` argparse *parent* carrying the
+flags shared by the whole suite — ``--fast`` / ``--json`` / ``--seed`` /
+``--paging`` / ``--page-bandwidth-gbs`` — so each bench composes it via
+``ArgumentParser(parents=[base_parser(seed=...)])`` and only declares its
+scenario-specific knobs. Benches wire the subset that applies (e.g. the
+memory bench always sweeps paging both ways, so its ``--paging`` is a
+no-op), but the flags parse uniformly everywhere the CI smoke lanes run.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
+from pathlib import Path
 from typing import Any, Callable, Dict, List
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def base_parser(seed: int = 42, page_bandwidth_gbs: float = 12.0) -> argparse.ArgumentParser:
+    """Parent parser with the suite-wide flags. ``add_help=False`` so the
+    child parser owns ``-h``; pass per-bench defaults for seed/bandwidth."""
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--fast", action="store_true", help="smoke scale (CI lanes)")
+    ap.add_argument("--json", default=None, help="write the summary dict to this path")
+    ap.add_argument("--seed", type=int, default=seed, help="trace RNG seed")
+    ap.add_argument(
+        "--paging",
+        action="store_true",
+        help="enable fungible-memory host paging (MemoryManager)",
+    )
+    ap.add_argument(
+        "--page-bandwidth-gbs",
+        type=float,
+        default=page_bandwidth_gbs,
+        help="modeled host-link bandwidth (GB/s) for paging/migration transfers",
+    )
+    return ap
+
+
+def write_json(path, results) -> None:
+    """Write a results dict where ``--json`` pointed (no-op when unset)."""
+    if not path:
+        return
+    out = Path(path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=2, default=float))
+    print(f"wrote {out}")
 
 
 def time_fn(fn: Callable, warmup: int = 1, iters: int = 5) -> float:

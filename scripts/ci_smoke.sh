@@ -39,3 +39,7 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_cluster \
 echo "== benchmark smoke: priority serving (Fig. 9/10 co-location regime) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serve \
     --fast --json experiments/bench_serve_smoke.json
+
+echo "== benchmark smoke: live migration (defrag/rebalance/drain regime) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_migration \
+    --fast --json experiments/bench_migration_smoke.json

@@ -1,23 +1,32 @@
 """Salus core: fine-grained accelerator sharing primitives.
 
 Public surface:
+  * :class:`Engine` protocol + :class:`ResultSurface` accessors — the one
+    API all backends speak (``submit``/``run``/``result``/``decision_log``;
+    ``avg_jct``/``p95_jct``/``utilization``/``per_job`` on every result)
   * :class:`LaneRegistry` — GPU lanes, Algorithm 1, safety condition, defrag
   * policies — FIFO / SRTF / PACK / FAIR / PRIORITY (``get_policy``)
   * :class:`Simulator` — discrete-event trace evaluation
   * :class:`SalusExecutor` + :class:`VirtualDevice` — live execution service
   * :class:`Cluster` / :class:`ClusterExecutor` — multi-GPU fleet behind
     placement strategies (``get_strategy``: least_loaded/best_fit/consolidate)
+    with optional :class:`Rebalancer` migration passes at epoch boundaries
   * profiles / tracegen — workload tables + trace/request-stream generation
 """
 from repro.core.adaptor import VirtualDevice
 from repro.core.cluster import Cluster, ClusterExecutor, ClusterReport, ClusterResult
-from repro.core.executor import SalusExecutor
+from repro.core.engine import DecisionLog, Engine, ResultSurface, busy_seconds
+from repro.core.executor import ExecutorReport, SalusExecutor
 from repro.core.placement import (
+    DeviceView,
+    JobView,
+    Migration,
     Placer,
     PlacementEvent,
     PlacementEventKind,
     PlacementPlan,
     PlacementStrategy,
+    Rebalancer,
     get_strategy,
 )
 from repro.core.lanes import Lane, LaneRegistry, SafetyViolation
@@ -37,20 +46,33 @@ from repro.core.types import (
 )
 
 __all__ = [
+    # engine API
+    "Engine",
+    "ResultSurface",
+    "DecisionLog",
+    "busy_seconds",
+    # engines + results
+    "Simulator",
+    "SimResult",
+    "SalusExecutor",
+    "ExecutorReport",
     "VirtualDevice",
     "Cluster",
     "ClusterExecutor",
     "ClusterReport",
     "ClusterResult",
+    # placement + migration
     "Placer",
     "PlacementEvent",
     "PlacementEventKind",
     "PlacementPlan",
     "PlacementStrategy",
     "get_strategy",
-    "PRIORITY",
-    "percentile",
-    "SalusExecutor",
+    "Rebalancer",
+    "Migration",
+    "DeviceView",
+    "JobView",
+    # memory + lanes
     "MemoryConfig",
     "MemoryManager",
     "MemoryEvent",
@@ -58,18 +80,20 @@ __all__ = [
     "Lane",
     "LaneRegistry",
     "SafetyViolation",
+    # policies
     "FIFO",
     "SRTF",
     "PACK",
     "FAIR",
+    "PRIORITY",
     "Policy",
     "get_policy",
-    "Simulator",
-    "SimResult",
+    # types
     "JobSpec",
     "JobState",
     "JobStats",
     "MemoryProfile",
     "GB",
     "MB",
+    "percentile",
 ]

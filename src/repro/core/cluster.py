@@ -15,6 +15,29 @@ An N=1 cluster is bitwise-identical to a bare single-device engine on
 the same trace: placement binds every job to device 0 with its original
 arrival time, and the device engine replays exactly the single-device
 decision sequence (locked by ``tests/test_differential.py``).
+
+**Rebalance epochs** (``rebalance_interval=T``): the fleet is driven in
+lockstep epochs instead of device-at-a-time. Every T scheduling-clock
+seconds each device advances to the horizon and drains its in-flight
+iterations (both engines stop *quiescent* — ephemeral regions empty, the
+iteration boundary where migration is safe), then a
+:class:`~repro.core.placement.Rebalancer` snapshots the devices into
+engine-agnostic views and decides :class:`Migration`s. Applying one
+composes the primitives end-to-end: ``migrate_out`` on the source
+(page-out-style release through the shared :class:`MemoryManager`, which
+logs MIGRATE_OUT and — in the live engine — really moves the session's
+persistent arrays to host) then ``migrate_in`` on the destination
+(MIGRATE_IN + the ordinary admission path; the live engine does a real
+``jax.device_put`` round-trip). Transfer costs (P/page_bandwidth
+modeled; measured wall reported) are charged to the migrated job's next
+iteration, so migration is never free. A
+:class:`~repro.dist.fault.FailureInjector` may fire between the out and
+in halves; the driver then rolls the job back onto its source
+(conservation: a job is never lost mid-migration) and logs
+MIGRATE_FAILED. Finally jobs *bound but not yet arrived* are re-placed
+against the post-migration fleet (placement is a-priori; the amendment
+pass is what lets consolidation actually shrink ``devices_used``).
+``rebalance_interval=None`` (default) keeps the exact PR-4 path.
 """
 from __future__ import annotations
 
@@ -22,41 +45,49 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Union
 
+from repro.core.engine import DecisionLog, ResultSurface, busy_seconds
 from repro.core.executor import ExecutorReport, SalusExecutor
 from repro.core.memory import MemoryConfig
-from repro.core.placement import Placer, PlacementPlan, PlacementStrategy
+from repro.core.placement import (
+    DeviceView,
+    JobView,
+    Migration,
+    Placer,
+    PlacementEvent,
+    PlacementEventKind,
+    PlacementPlan,
+    PlacementStrategy,
+    Rebalancer,
+)
 from repro.core.scheduler import Policy, get_policy
 from repro.core.simulator import SimResult, Simulator
-from repro.core.types import IterationRecord, JobSpec, JobStats, percentile
+from repro.core.types import (
+    IterationRecord,
+    JobSpec,
+    JobState,
+    JobStats,
+)
+from repro.dist.fault import InjectedFailure, StragglerMonitor
 
+# retained alias (pre-Engine-API name; canonical home is repro.core.engine)
+_busy_seconds = busy_seconds
 
-def _busy_seconds(records: Sequence[IterationRecord]) -> float:
-    """Total device-busy wall time: union of iteration intervals (lanes
-    overlap under concurrent policies, so plain summation overcounts)."""
-    spans = sorted((r.start, r.end) for r in records)
-    total, cur_start, cur_end = 0.0, None, None
-    for s, e in spans:
-        if cur_end is None or s > cur_end:
-            if cur_end is not None:
-                total += cur_end - cur_start
-            cur_start, cur_end = s, e
-        else:
-            cur_end = max(cur_end, e)
-    if cur_end is not None:
-        total += cur_end - cur_start
-    return total
+_TERMINAL = (JobState.FINISHED, JobState.FAILED)
 
 
 @dataclass
-class ClusterResult:
+class ClusterResult(ResultSurface):
     """Aggregation of per-device :class:`SimResult`s plus the placement
-    decision log (fleet avg/p95 JCT, per-device utilization)."""
+    decision log (fleet avg/p95 JCT, per-device utilization). Mixes in the
+    unified :class:`ResultSurface` accessors; ``utilization`` is the mean
+    of per-device busy fractions (a union across devices is meaningless)."""
 
     device_results: List[SimResult]
     plan: PlacementPlan
     jobs: Dict[int, JobSpec] = field(default_factory=dict)
+    migrations: List[Migration] = field(default_factory=list)
 
-    # -- fleet-wide JCT aggregation ------------------------------------
+    # -- fleet-wide aggregation ----------------------------------------
 
     @property
     def stats(self) -> Dict[int, JobStats]:
@@ -66,26 +97,12 @@ class ClusterResult:
         return out
 
     @property
-    def jcts(self) -> List[float]:
-        return [v for res in self.device_results for v in res.jcts]
-
-    @property
-    def avg_jct(self) -> float:
-        v = self.jcts
-        return sum(v) / len(v) if v else 0.0
-
-    @property
-    def p95_jct(self) -> float:
-        v = percentile(self.jcts, 0.95)
-        return 0.0 if v is None else v
+    def records(self) -> List[IterationRecord]:
+        return [r for res in self.device_results for r in res.records]
 
     @property
     def makespan(self) -> float:
         return max((r.makespan for r in self.device_results), default=0.0)
-
-    @property
-    def completed(self) -> int:
-        return sum(r.completed for r in self.device_results)
 
     @property
     def devices_used(self) -> int:
@@ -97,10 +114,25 @@ class ClusterResult:
         span = self.makespan
         if span <= 0.0:
             return [0.0 for _ in self.device_results]
-        return [_busy_seconds(r.records) / span for r in self.device_results]
+        return [busy_seconds(r.records) / span for r in self.device_results]
+
+    @property
+    def utilization(self) -> float:
+        per = self.per_device_utilization
+        return sum(per) / len(per) if per else 0.0
+
+    @property
+    def decision_log(self) -> DecisionLog:
+        """The fleet-level decision sequence is the placement log (each
+        device result carries its own memory-manager log). A
+        :class:`DecisionLog` both compares as a list and is callable."""
+        return DecisionLog(self.plan.decision_log())
 
     def placement_log(self) -> List[tuple]:
         return self.plan.decision_log()
+
+    def migration_log(self) -> List[tuple]:
+        return self.plan.migration_log()
 
     def summary(self) -> Dict:
         placed = len(self.plan.assignments)
@@ -120,13 +152,50 @@ class ClusterResult:
             # (a placed job always has P + E <= its device's capacity)
             "rejected": len(self.plan.rejected),
             "completed": self.completed,
+            "migrations": len(self.migrations),
             "per_device_utilization": self.per_device_utilization,
             "per_device_jobs": [len(r.stats) for r in self.device_results],
         }
 
 
-class Cluster:
-    """N per-device Simulators behind a placement policy."""
+class _RebalanceMixin:
+    """Fleet-driver machinery shared by :class:`Cluster` and
+    :class:`ClusterExecutor`: rebalancer wiring, migration application
+    with failure rollback, and the migration event log."""
+
+    def _init_rebalance(
+        self,
+        rebalancer: Optional[Rebalancer],
+        rebalance_interval: Optional[float],
+        fault_injector,
+    ) -> None:
+        if rebalance_interval is not None and rebalance_interval <= 0:
+            raise ValueError(
+                f"rebalance_interval must be positive, got {rebalance_interval}"
+            )
+        if rebalancer is not None and rebalance_interval is None:
+            raise ValueError("a rebalancer needs rebalance_interval to ever run")
+        if rebalance_interval is not None and rebalancer is None:
+            rebalancer = Rebalancer()
+        self.rebalancer = rebalancer
+        self.rebalance_interval = rebalance_interval
+        self.fault_injector = fault_injector
+        self._mig_seq = 0
+
+    def _log_migration(
+        self, plan: PlacementPlan, kind: PlacementEventKind, t: float, m: Migration, dst: int
+    ) -> None:
+        plan.events.append(
+            PlacementEvent(
+                kind, t, plan.order.get(m.job_id, -1), m.name, dst,
+                src_device_id=m.src,
+            )
+        )
+
+
+class Cluster(_RebalanceMixin):
+    """N per-device Simulators behind a placement policy (an
+    :class:`~repro.core.engine.Engine`)."""
 
     def __init__(
         self,
@@ -137,51 +206,255 @@ class Cluster:
         switch_overhead: float = 0.0,
         memory: Optional[MemoryConfig] = None,
         deficit_quantum: Optional[int] = None,
+        rebalancer: Optional[Rebalancer] = None,
+        rebalance_interval: Optional[float] = None,
+        fault_injector=None,
     ):
         self.placer = Placer(
             n_devices, capacity, strategy, deficit_quantum=deficit_quantum
         )
-        self.policy = get_policy(policy) if isinstance(policy, str) else policy
+        self.policy = get_policy(policy)
         self.switch_overhead = switch_overhead
         self.memory = memory
+        self._init_rebalance(rebalancer, rebalance_interval, fault_injector)
+        self._submitted: List[JobSpec] = []
+        self._plan: Optional[PlacementPlan] = None
+        self._result: Optional[ClusterResult] = None
 
     @property
     def n_devices(self) -> int:
         return self.placer.n_devices
 
+    # -- Engine protocol -----------------------------------------------
+
+    def submit(self, job: JobSpec) -> None:
+        self._submitted.append(job)
+
+    def result(self) -> Optional[ClusterResult]:
+        return self._result
+
+    def decision_log(self) -> List[tuple]:
+        return self._plan.decision_log() if self._plan is not None else []
+
     def run(
-        self, jobs: Sequence[JobSpec], until: Optional[float] = None
+        self,
+        jobs: Optional[Sequence[JobSpec]] = None,
+        until: Optional[float] = None,
     ) -> ClusterResult:
+        jobs = list(self._submitted if jobs is None else jobs)
         plan = self.placer.place(jobs)
+        self._plan = plan
         # infeasible jobs still transit the biggest device's admission
         # control so they are rejected *in-engine* (uniform per-job stats,
         # N=1 decision-log parity with a bare Simulator)
         sink = max(
             range(self.n_devices), key=lambda i: self.placer.capacities[i]
         )
-        device_results: List[SimResult] = []
-        for dev_id, dev_jobs in enumerate(
-            plan.device_jobs(jobs, route_rejected_to=sink)
-        ):
-            sim = Simulator(
-                self.placer.capacities[dev_id],
+        sims = [
+            Simulator(
+                self.placer.capacities[i],
                 self.policy,
                 switch_overhead=self.switch_overhead,
                 memory=self.memory,
             )
-            device_results.append(sim.run(dev_jobs, until=until))
-        return ClusterResult(
-            device_results, plan, jobs={j.job_id: j for j in jobs}
+            for i in range(self.n_devices)
+        ]
+        for sim, dev_jobs in zip(sims, plan.device_jobs(jobs, route_rejected_to=sink)):
+            sim.start(dev_jobs)
+        applied: List[Migration] = []
+        if self.rebalance_interval is None:
+            for sim in sims:
+                sim.advance(until)
+        else:
+            self._mig_seq = 0
+            jobs_by_id = {j.job_id: j for j in jobs}
+            self._rec_mark = [0] * len(sims)
+            self._monitors = [StragglerMonitor() for _ in sims]
+            t = self.rebalance_interval
+            while True:
+                before = sum(len(s._records) for s in sims)
+                horizon = t if until is None else min(t, until)
+                for sim in sims:
+                    sim.advance(horizon)
+                if until is not None and horizon >= until:
+                    break
+                for sim in sims:
+                    sim.drain_running()
+                progress = sum(len(s._records) for s in sims) - before
+                attempted = self._rebalance_sims(
+                    sims, plan, horizon, jobs, jobs_by_id, applied
+                )
+                # quiescence != completion: after a drain nothing is queued
+                # in the heaps, but READY jobs will re-schedule on the next
+                # advance — keep going while any epoch makes progress, any
+                # events remain, or a migration just changed the fleet
+                if (
+                    not attempted
+                    and progress == 0
+                    and not any(s.pending_events for s in sims)
+                ):
+                    break
+                t += self.rebalance_interval
+        self._result = ClusterResult(
+            [sim.result() for sim in sims],
+            plan,
+            jobs={j.job_id: j for j in jobs},
+            migrations=applied,
         )
+        return self._result
+
+    # -- rebalance epoch internals ---------------------------------------
+
+    def _telemetry(self, dev_id: int, records, jobs_by_id):
+        """Measured/declared dilation + strongest straggler flag since the
+        last boundary — the JobStats/StragglerMonitor feedback the drift
+        pass runs on. Durations are normalized by the job's declared
+        iter_time before feeding the monitor so heterogeneous jobs share
+        one distribution."""
+        new = records[self._rec_mark[dev_id] :]
+        self._rec_mark[dev_id] = len(records)
+        mon = self._monitors[dev_id]
+        n_flagged = len(mon.flagged)
+        measured = declared = 0.0
+        for r in new:
+            spec = jobs_by_id.get(r.job_id)
+            if spec is None or spec.iter_time <= 0:
+                continue
+            measured += r.duration
+            declared += spec.iter_time
+            mon.observe(r.index, r.duration / spec.iter_time)
+        sigma = max((f.sigma for f in mon.flagged[n_flagged:]), default=0.0)
+        return (measured / declared if declared > 0 else 1.0), sigma
+
+    def _rebalance_sims(self, sims, plan, t, jobs, jobs_by_id, applied) -> int:
+        views = []
+        for dev_id, sim in enumerate(sims):
+            jvs = []
+            for jid, state in sim._state.items():
+                if state in _TERMINAL or not sim.has_arrived(jid):
+                    continue
+                st = sim._stats[jid]
+                jvs.append(
+                    JobView(
+                        spec=sim._jobs[jid],
+                        done=st.iterations_done,
+                        migrations=st.migrations,
+                        movable=state is not JobState.RUNNING,
+                    )
+                )
+            jvs.sort(key=lambda v: v.spec.job_id)
+            dilation, sigma = self._telemetry(dev_id, sim._records, jobs_by_id)
+            views.append(
+                DeviceView(
+                    dev_id,
+                    sim.registry.capacity,
+                    sim.registry,
+                    jobs=jvs,
+                    dilation=dilation,
+                    straggler_sigma=sigma,
+                )
+            )
+        attempted = 0
+        for m in self.rebalancer.decide(views):
+            attempted += 1
+            if self._apply_sim(m, sims, plan, t):
+                applied.append(m)
+        self._replace_pending(sims, plan, t, jobs)
+        return attempted
+
+    def _apply_sim(self, m: Migration, sims, plan, t: float) -> bool:
+        src, dst = sims[m.src], sims[m.dst]
+        job = src._jobs[m.job_id]
+        st, carry = src.migrate_out(job)
+        self._mig_seq += 1
+        try:
+            if self.fault_injector is not None:
+                self.fault_injector.maybe_fail(self._mig_seq)
+        except InjectedFailure:
+            # conservation under failure: the job is never lost — it lands
+            # back on its source, paying the round-trip transfer again
+            src.migrate_in(job, st, now=t, extra_delay=carry)
+            self._log_migration(plan, PlacementEventKind.MIGRATE_FAILED, t, m, m.src)
+            return False
+        st.migrations += 1
+        dst.migrate_in(job, st, now=t, extra_delay=carry)
+        plan.assignments[m.job_id] = m.dst
+        self._log_migration(plan, PlacementEventKind.MIGRATE, t, m, m.dst)
+        return True
+
+    def _replace_pending(self, sims, plan, t: float, jobs) -> None:
+        """Re-bind jobs that have not *arrived* yet against the
+        post-migration fleet, per the placer's strategy over live
+        registries. Placement is a-priori; without this amendment a device
+        consolidation could never shrink ``devices_used`` (the future
+        arrival would re-open the just-emptied device)."""
+        for job in jobs:
+            jid = job.job_id
+            cur = plan.assignments.get(jid)
+            if cur is None or jid in plan.rejected:
+                continue
+            sim = sims[cur]
+            if jid not in sim._jobs or sim.has_arrived(jid) or job.arrival_time <= t:
+                continue
+            best = self._choose_pending(sims, job)
+            if best is None or best == cur:
+                continue
+            sim.remove_pending(job)
+            sims[best].add_pending(job)
+            plan.assignments[jid] = best
+            plan.events.append(
+                PlacementEvent(
+                    PlacementEventKind.REPLACE, t, plan.order.get(jid, -1),
+                    job.name, best, src_device_id=cur,
+                )
+            )
+
+    def _choose_pending(self, sims, job: JobSpec) -> Optional[int]:
+        drain = self.rebalancer.drain if self.rebalancer is not None else frozenset()
+
+        def free(sim):
+            reg = sim.registry
+            return reg.capacity - reg.persistent_used - reg.lane_total
+
+        def load(i):
+            sim = sims[i]
+            total = 0.0
+            for jid, state in sim._state.items():
+                if state in _TERMINAL:
+                    continue
+                spec = sim._jobs[jid]
+                done = sim._stats[jid].iterations_done
+                total += max(0, spec.n_iters - done) * spec.iter_time
+            return total
+
+        fits = [
+            i
+            for i, sim in enumerate(sims)
+            if i not in drain
+            and job.profile.total <= sim.registry.capacity
+            and sim.memory._bytes_needed(job) == 0
+        ]
+        if not fits:
+            return None
+        strategy = self.placer.strategy
+        if strategy is PlacementStrategy.LEAST_LOADED:
+            key = lambda i: (load(i), i)
+        elif strategy is PlacementStrategy.BEST_FIT:
+            key = lambda i: (free(sims[i]), i)
+        else:  # CONSOLIDATE: occupied and fullest first; open devices last
+            key = lambda i: (not bool(sims[i].registry.assignment), free(sims[i]), i)
+        return min(fits, key=key)
 
 
 @dataclass
-class ClusterReport:
+class ClusterReport(ResultSurface):
     """Live-side aggregation: per-device :class:`ExecutorReport`s plus the
-    shared placement plan."""
+    shared placement plan, with the same unified accessor surface as
+    :class:`ClusterResult`."""
 
     device_reports: List[ExecutorReport]
     plan: PlacementPlan
+    migrations: List[Migration] = field(default_factory=list)
 
     @property
     def stats(self) -> Dict[int, JobStats]:
@@ -191,23 +464,28 @@ class ClusterReport:
         return out
 
     @property
-    def jcts(self) -> List[float]:
-        return [
-            s.jct
-            for rep in self.device_reports
-            for s in rep.stats.values()
-            if s.jct is not None
-        ]
+    def records(self) -> List[IterationRecord]:
+        return [r for rep in self.device_reports for r in rep.records]
 
     @property
-    def avg_jct(self) -> float:
-        v = self.jcts
-        return sum(v) / len(v) if v else 0.0
+    def makespan(self) -> float:
+        return max((rep.makespan for rep in self.device_reports), default=0.0)
 
     @property
-    def p95_jct(self) -> float:
-        v = percentile(self.jcts, 0.95)
-        return 0.0 if v is None else v
+    def devices_used(self) -> int:
+        return sum(1 for rep in self.device_reports if rep.records)
+
+    @property
+    def per_device_utilization(self) -> List[float]:
+        span = self.makespan
+        if span <= 0.0:
+            return [0.0 for _ in self.device_reports]
+        return [busy_seconds(rep.records) / span for rep in self.device_reports]
+
+    @property
+    def utilization(self) -> float:
+        per = self.per_device_utilization
+        return sum(per) / len(per) if per else 0.0
 
     @property
     def failures(self) -> Dict[int, str]:
@@ -216,21 +494,33 @@ class ClusterReport:
             out.update(rep.failures)
         return out
 
+    @property
+    def decision_log(self) -> DecisionLog:
+        return DecisionLog(self.plan.decision_log())
+
     def decision_logs(self) -> List[List[tuple]]:
         return [rep.decision_log for rep in self.device_reports]
 
     def placement_log(self) -> List[tuple]:
         return self.plan.decision_log()
 
+    def migration_log(self) -> List[tuple]:
+        return self.plan.migration_log()
 
-class ClusterExecutor:
+
+class ClusterExecutor(_RebalanceMixin):
     """The live fleet: N SalusExecutors driven per-device by the same
     placement decisions the simulation cluster uses. Sessions are
     collected via :meth:`submit`; :meth:`run` places their JobSpecs with
     the shared :class:`Placer`, hands each session to its device's
     executor, and drives the devices to completion (sequentially — one
     host process time-multiplexes the fleet, which preserves each
-    device's decision sequence under nominal accounting)."""
+    device's decision sequence under nominal accounting). With
+    ``rebalance_interval`` set, devices run in lockstep ``run_epoch``
+    rounds and migrations really move session state across the host link
+    (``jax.device_get`` on the source, ``jax.device_put`` on the
+    destination — compose :func:`repro.dist.elastic.restore_on_mesh` via
+    ``SalusExecutor.migrate_in``'s ``put_fn`` for mesh-aware landings)."""
 
     def __init__(
         self,
@@ -241,30 +531,45 @@ class ClusterExecutor:
         memory: Optional[MemoryConfig] = None,
         accounting: str = "wall",
         deficit_quantum: Optional[int] = None,
+        rebalancer: Optional[Rebalancer] = None,
+        rebalance_interval: Optional[float] = None,
+        fault_injector=None,
     ):
         self.placer = Placer(
             n_devices, capacity, strategy, deficit_quantum=deficit_quantum
         )
-        policy = get_policy(policy) if isinstance(policy, str) else policy
+        policy = get_policy(policy)
         self.executors = [
             SalusExecutor(
                 self.placer.capacities[i], policy, memory=memory, accounting=accounting
             )
             for i in range(n_devices)
         ]
+        self._init_rebalance(rebalancer, rebalance_interval, fault_injector)
         self._sessions: List = []
+        self._plan: Optional[PlacementPlan] = None
+        self._report: Optional[ClusterReport] = None
 
     @property
     def n_devices(self) -> int:
         return self.placer.n_devices
 
+    # -- Engine protocol -----------------------------------------------
+
     def submit(self, session) -> None:
         self._sessions.append(session)
+
+    def result(self) -> Optional[ClusterReport]:
+        return self._report
+
+    def decision_log(self) -> List[tuple]:
+        return self._plan.decision_log() if self._plan is not None else []
 
     def run(self, max_wall: Optional[float] = None) -> ClusterReport:
         """``max_wall`` is a *fleet-wide* budget: devices run sequentially
         on one host, so each gets whatever remains of it."""
         plan = self.placer.place([s.job for s in self._sessions])
+        self._plan = plan
         sink = max(
             range(self.n_devices), key=lambda i: self.placer.capacities[i]
         )
@@ -275,12 +580,74 @@ class ClusterExecutor:
             if dev is not None:
                 self.executors[dev].submit(sess)
         t0 = time.perf_counter()
-        reports = []
-        for ex in self.executors:
-            remaining = (
-                None
-                if max_wall is None
-                else max(0.0, max_wall - (time.perf_counter() - t0))
+
+        def remaining() -> Optional[float]:
+            if max_wall is None:
+                return None
+            return max(0.0, max_wall - (time.perf_counter() - t0))
+
+        applied: List[Migration] = []
+        if self.rebalance_interval is not None:
+            self._mig_seq = 0
+            t = self.rebalance_interval
+            while True:
+                progress = 0
+                for ex in self.executors:
+                    progress += ex.run_epoch(t, max_wall=remaining())
+                attempted = self._rebalance_executors(plan, t, applied)
+                if not attempted and (
+                    all(ex.done() for ex in self.executors) or progress == 0
+                ):
+                    # quiescent fleet: either finished, or stalled work the
+                    # final full drive below will surface (deadlock guard)
+                    break
+                if max_wall is not None and time.perf_counter() - t0 > max_wall:
+                    break
+                t += self.rebalance_interval
+        reports = [ex.run(max_wall=remaining()) for ex in self.executors]
+        self._report = ClusterReport(reports, plan, migrations=applied)
+        return self._report
+
+    # -- rebalance epoch internals ---------------------------------------
+
+    def _rebalance_executors(self, plan, t: float, applied) -> int:
+        views = []
+        for dev_id, ex in enumerate(self.executors):
+            jvs = []
+            for jid, state in ex.state.items():
+                if state in _TERMINAL:
+                    continue
+                st = ex.stats[jid]
+                jvs.append(
+                    JobView(
+                        spec=ex.sessions[jid].job,
+                        done=st.iterations_done,
+                        migrations=st.migrations,
+                        movable=state is not JobState.RUNNING,
+                    )
+                )
+            jvs.sort(key=lambda v: v.spec.job_id)
+            views.append(
+                DeviceView(dev_id, ex.registry.capacity, ex.registry, jobs=jvs)
             )
-            reports.append(ex.run(max_wall=remaining))
-        return ClusterReport(reports, plan)
+        attempted = 0
+        for m in self.rebalancer.decide(views):
+            attempted += 1
+            src, dst = self.executors[m.src], self.executors[m.dst]
+            sess, st, carry = src.migrate_out(m.job_id)
+            self._mig_seq += 1
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector.maybe_fail(self._mig_seq)
+            except InjectedFailure:
+                src.migrate_in(sess, st, extra_delay=carry)
+                self._log_migration(
+                    plan, PlacementEventKind.MIGRATE_FAILED, t, m, m.src
+                )
+                continue
+            st.migrations += 1
+            dst.migrate_in(sess, st, extra_delay=carry)
+            plan.assignments[m.job_id] = m.dst
+            self._log_migration(plan, PlacementEventKind.MIGRATE, t, m, m.dst)
+            applied.append(m)
+        return attempted

@@ -115,16 +115,26 @@ class LaneRegistry:
         When the departing job was the lane's largest, the lane shrinks to the
         remaining residents' max E (shrink is part of auto-defrag: between
         iterations the ephemeral region is empty, so it is zero-copy)."""
+        self.job_depart(job)
+
+    def job_depart(self, job: JobSpec) -> int:
+        """Remove ``job`` from this device without finishing it — the source
+        half of a migration (JOBFINISH is a departure whose job happens to be
+        done; both release the same resources). Returns the persistent bytes
+        that were resident on-device (0 for a paged-out or still-queued job),
+        i.e. what a migration must move across the host link."""
         lane = self.assignment.pop(job.job_id, None)
         if lane is None:
-            if job in self.queue:  # finished (killed) while still queued
+            if job in self.queue:  # departed (killed/migrated) while queued
                 self.queue.remove(job)
-            return
+            return 0
         lane.jobs.remove(job)
         if job.job_id in self.paged:
             self.paged.discard(job.job_id)  # persistent already off-device
+            freed = 0
         else:
             self.persistent_used -= job.profile.persistent
+            freed = job.profile.persistent
         if lane.ref == 0:
             del self.lanes[lane.lane_id]
             self._defragment()
@@ -133,6 +143,25 @@ class LaneRegistry:
             if new_size < lane.size:
                 self._resize_lane(lane, new_size)
         self.process_requests()
+        return freed
+
+    def clone(self) -> "LaneRegistry":
+        """Detached snapshot for what-if admission reasoning (the Rebalancer
+        packs tentative migrations against clones, never the live registry).
+        Shares the JobSpec objects but copies all layout state; callbacks are
+        not carried over, so mutating the clone fires nothing."""
+        c = LaneRegistry(self.capacity)
+        for lid, lane in self.lanes.items():
+            c.lanes[lid] = Lane(lane.lane_id, lane.size, lane.base, list(lane.jobs))
+        c.persistent_used = self.persistent_used
+        c.queue = list(self.queue)
+        c.assignment = {
+            jid: c.lanes[lane.lane_id] for jid, lane in self.assignment.items()
+        }
+        c.paged = set(self.paged)
+        c.moves = self.moves
+        c._ids = itertools.count(max(self.lanes, default=-1) + 1)
+        return c
 
     def process_requests(self) -> None:
         """PROCESSREQUESTS: admit queued jobs in FIFO order where possible."""

@@ -178,7 +178,15 @@ class PRIORITY(Policy):
 POLICIES = {p.name: p for p in (FIFO(), SRTF(), PACK(), FAIR(), PRIORITY())}
 
 
-def get_policy(name: str) -> Policy:
-    if name not in POLICIES:
+def get_policy(name) -> Policy:
+    """Resolve a policy from a case-insensitive name or pass an already-
+    constructed :class:`Policy` through unchanged — the one blessed entry
+    point, mirrored by ``placement.get_strategy``."""
+    if isinstance(name, Policy):
+        return name
+    if isinstance(name, str):
+        key = name.lower()
+        if key in POLICIES:
+            return POLICIES[key]
         raise KeyError(f"unknown policy {name!r}; known: {sorted(POLICIES)}")
-    return POLICIES[name]
+    raise TypeError(f"policy must be a name or Policy, got {type(name).__name__}")

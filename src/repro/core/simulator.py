@@ -14,6 +14,17 @@ Faithful to the paper's mechanism:
   * optional per-switch latency (``switch_overhead``) to model Salus's small
     switching cost vs. checkpoint-based switching (Gandiva): used by the
     overhead/switching benchmarks.
+
+The simulator satisfies the :class:`~repro.core.engine.Engine` protocol
+and is *resumable*: ``run()`` is sugar for ``start() + advance() +
+result()``, and a fleet driver may instead interleave ``advance(T)`` /
+``drain_running()`` epochs with cross-device migrations
+(``migrate_out`` / ``migrate_in``) applied at the quiescent boundary —
+see :mod:`repro.core.cluster`. ``advance`` processes events up to the
+horizon; ``drain_running`` lets in-flight iterations finish (running
+their normal boundary ticks) without starting new ones, which is exactly
+the executor's behavior when its loop condition trips mid-sweep, so the
+two engines reach epoch boundaries in the same quiescent state.
 """
 from __future__ import annotations
 
@@ -22,9 +33,10 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.engine import DecisionLog, ResultSurface
 from repro.core.lanes import Lane, LaneRegistry
 from repro.core.memory import MemoryConfig, MemoryManager
-from repro.core.scheduler import Policy
+from repro.core.scheduler import Policy, get_policy
 from repro.core.types import (
     IterationRecord,
     JobSpec,
@@ -32,7 +44,6 @@ from repro.core.types import (
     JobStats,
     MemoryEvent,
     MemoryEventKind,
-    percentile,
 )
 
 
@@ -42,54 +53,32 @@ class _Event:
     seq: int
     kind: str = field(compare=False)  # arrival | iter_done | request
     job: JobSpec = field(compare=False)
+    # generation stamp: bumped when a job migrates away or is re-placed, so
+    # its stale events are skipped if the job later returns to this device
+    gen: int = field(default=0, compare=False)
 
 
 @dataclass
-class SimResult:
+class SimResult(ResultSurface):
     stats: Dict[int, JobStats]
     jobs: Dict[int, JobSpec]
     records: List[IterationRecord]
     makespan: float
     registry_stats: Dict
     memory_events: List[MemoryEvent] = field(default_factory=list)
-    decision_log: List[tuple] = field(default_factory=list)
+    decision_log: DecisionLog = field(default_factory=DecisionLog)
 
-    # ------------------------------------------------------------------
+    # jcts / avg_jct / p95_jct / utilization / completed / per_job /
+    # request_latencies come from ResultSurface.
+
     def _collect(self, fn):
         vals = [fn(s) for s in self.stats.values()]
         return [v for v in vals if v is not None]
 
     @property
-    def jcts(self) -> List[float]:
-        return self._collect(lambda s: s.jct)
-
-    @property
-    def avg_jct(self) -> float:
-        v = self.jcts
-        return sum(v) / len(v) if v else 0.0
-
-    @property
-    def p95_jct(self) -> float:
-        # nearest-rank, shared with JobStats/benchmarks via types.percentile
-        v = percentile(self.jcts, 0.95)
-        return 0.0 if v is None else v
-
-    @property
     def avg_queuing(self) -> float:
         v = self._collect(lambda s: s.queuing)
         return sum(v) / len(v) if v else 0.0
-
-    @property
-    def completed(self) -> int:
-        return sum(1 for s in self.stats.values() if s.finish_time is not None)
-
-    @property
-    def request_latencies(self) -> List[float]:
-        """All open-loop request latencies across jobs (queueing + service)."""
-        out: List[float] = []
-        for s in self.stats.values():
-            out.extend(s.request_latencies)
-        return out
 
     def summary(self) -> Dict:
         return {
@@ -118,234 +107,447 @@ class Simulator:
     ):
         self.registry = LaneRegistry(capacity)
         self.memory = MemoryManager(self.registry, memory)
-        self.policy = policy
+        self.policy = get_policy(policy)
         self.switch_overhead = switch_overhead
+        self._submitted: List[JobSpec] = []
+        self._started = False
+        # live run state (populated by start())
+        self._stats: Dict[int, JobStats] = {}
+        self._state: Dict[int, JobState] = {}
+        self._jobs: Dict[int, JobSpec] = {}
+        self._records: List[IterationRecord] = []
+        self._running_iter: Dict[int, Tuple[JobSpec, float]] = {}  # lane -> (job, t0)
+        self._last_on_device: Dict[int, int] = {}  # lane_id -> job_id (switches)
+        self._transfer_delay: Dict[int, float] = {}  # job_id -> pending paging s
+        self._pending_out_cost = 0.0  # page-out time owed by the next admission
+        self._last_ran: Optional[int] = None  # job whose iteration just ended
+        self._seq = itertools.count()
+        self._events: List[_Event] = []
+        self._now = 0.0
+        self._gen: Dict[int, int] = {}  # job_id -> current event generation
+        self._arrived: set = set()  # job_ids whose arrival event was processed
 
-    def run(self, jobs: List[JobSpec], until: Optional[float] = None) -> SimResult:
-        reg, policy, mm = self.registry, self.policy, self.memory
-        stats: Dict[int, JobStats] = {}
-        state: Dict[int, JobState] = {}
-        records: List[IterationRecord] = []
-        running_iter: Dict[int, Tuple[JobSpec, float]] = {}  # lane_id -> (job, start)
-        last_on_device: Dict[int, int] = {}  # lane_id -> job_id (switch detection)
-        transfer_delay: Dict[int, float] = {}  # job_id -> pending paging seconds
-        pending_out_cost = [0.0]  # page-out time owed by the next admission
-        last_ran = [None]  # job_id whose iteration just ended (unfinished only)
-        seq = itertools.count()
-        events: List[_Event] = []
-        now = 0.0
+    # ------------------------------------------------------------------
+    # Engine protocol
+    # ------------------------------------------------------------------
 
+    def submit(self, job: JobSpec) -> None:
+        """Queue a job for the next ``run()`` / ``start()`` call."""
+        self._submitted.append(job)
+
+    def run(self, jobs: Optional[List[JobSpec]] = None, until: Optional[float] = None) -> SimResult:
+        """One-shot drive: start the trace, advance to the horizon (or
+        exhaustion), return the result. Equivalent to the resumable
+        ``start(); advance(until); result()`` sequence."""
+        self.start(self._submitted if jobs is None else jobs)
+        self.advance(until)
+        return self.result()
+
+    def decision_log(self) -> List[tuple]:
+        return self.memory.decision_log()
+
+    # ------------------------------------------------------------------
+    # Resumable driving surface (used by the cluster's rebalance epochs)
+    # ------------------------------------------------------------------
+
+    def start(self, jobs: List[JobSpec]) -> None:
+        """Install the trace: per-job bookkeeping + arrival/request events.
+        Call once; drive with ``advance``/``drain_running`` afterwards."""
+        if self._started:
+            raise RuntimeError("Simulator.start() called twice; use a fresh instance")
+        self._started = True
+        self.memory.on_admit = self._on_admit
+        self.memory.on_event = self._on_mem_event
         for job in jobs:
-            stats[job.job_id] = JobStats(arrival_time=job.arrival_time)
-            state[job.job_id] = JobState.QUEUED
-            heapq.heappush(events, _Event(job.arrival_time, next(seq), "arrival", job))
-            if job.request_times:
-                # open-loop services: each request arrival is an event that
-                # wakes the scheduler (requests queue; they are not
-                # always-ready iterations)
-                for rt in job.request_times:
-                    heapq.heappush(
-                        events,
-                        _Event(max(rt, job.arrival_time), next(seq), "request", job),
-                    )
+            self.add_pending(job)
 
-        def active_utilization() -> float:
-            return sum(j.utilization for j, _ in running_iter.values())
+    @property
+    def pending_events(self) -> bool:
+        return bool(self._events)
 
-        def busy() -> frozenset:
-            return frozenset(j.job_id for j, _ in running_iter.values())
+    def has_arrived(self, job_id: int) -> bool:
+        """Has this job's arrival event been processed (i.e. has it reached
+        this device's admission control)? Pre-arrival jobs may still be
+        re-placed onto another device without a migration."""
+        return job_id in self._arrived
 
-        def candidates_in(lane: Lane) -> List[JobSpec]:
-            return [
-                j
-                for j in lane.jobs
-                if state[j.job_id] in (JobState.READY, JobState.PAUSED)
-                and j.request_pending(stats[j.job_id].iterations_done, now)
-            ]
-
-        def start_iteration(lane: Lane, job: JobSpec):
-            st = stats[job.job_id]
-            if st.first_run_time is None:
-                st.first_run_time = now
-            state[job.job_id] = JobState.RUNNING
-            overhead = 0.0
-            # switch detection: device-wide for exclusive policies, per-lane
-            # (per GPU stream) for concurrent ones
-            switch_key = 0 if policy.exclusive else lane.lane_id
-            if self.switch_overhead and last_on_device.get(switch_key) != job.job_id:
-                overhead = self.switch_overhead
-            last_on_device[switch_key] = job.job_id
-            # contention freeze at start (see module docstring)
-            contention = max(1.0, active_utilization() + job.utilization)
-            # paging transfers delay the affected job's next iteration
-            dur = job.iter_time * contention + overhead + transfer_delay.pop(job.job_id, 0.0)
-            running_iter[lane.lane_id] = (job, now)
-            heapq.heappush(events, _Event(now + dur, next(seq), "iter_done", job))
-
-        def schedule():
-            """Fill idle lanes (or the idle device, for exclusive policies)."""
-            if policy.exclusive:
-                if running_iter:
-                    # iteration-granularity preemption: let it finish
-                    return
-                ready = [
-                    j
-                    for lane in reg.lanes.values()
-                    for j in candidates_in(lane)
-                ]
-                job = policy.select(ready, stats, now, blocked=frozenset(reg.paged))
-                if job is not None:
-                    lane = reg.assignment[job.job_id]
-                    # genuine preemption = running -> paused displacement:
-                    # only the job whose iteration just ended, still wanting
-                    # the device (it is a candidate), loses the pick to
-                    # another job. Bystanders merely waiting their turn are
-                    # not preempted and stay READY.
-                    prev = last_ran[0]
-                    if (
-                        prev is not None
-                        and prev != job.job_id
-                        and any(o.job_id == prev for o in ready)
-                    ):
-                        state[prev] = JobState.PAUSED
-                        stats[prev].preemptions += 1
-                    start_iteration(lane, job)
-                else:
-                    # device going idle: the previous runner yielded with
-                    # nothing runnable, so whatever runs after the gap
-                    # displaces no one
-                    last_ran[0] = None
+    def advance(self, until: Optional[float] = None) -> None:
+        """Process events up to ``until`` (inclusive; None = exhaustion).
+        Iterations may *start* at any time <= until; ones still in flight at
+        the horizon stay in flight (see ``drain_running``). The clock is
+        clamped to the horizon so makespan bookkeeping never reflects a
+        timestamp past it."""
+        if not self._started:
+            raise RuntimeError("advance() before start()")
+        reg, mm = self.registry, self.memory
+        # kick-schedule: a no-op on a fresh start (no lanes yet), but after a
+        # migration boundary the migrated-in jobs hold lanes with no event to
+        # wake the scheduler — mirror the executor, whose epoch loop rescans
+        # candidates unconditionally
+        self._schedule()
+        self._idle_ticks(True)
+        while self._events:
+            if until is not None and self._events[0].time > until:
+                self._now = max(self._now, until)
                 return
-            for lane in list(reg.lanes.values()):
-                if lane.lane_id in running_iter:
-                    continue
-                job = policy.select(
-                    candidates_in(lane), stats, now, blocked=frozenset(reg.paged)
-                )
-                if job is not None:
-                    start_iteration(lane, job)
-
-        def on_admit(job: JobSpec, lane: Lane):
-            st = stats[job.job_id]
-            if st.admit_time is None:
-                st.admit_time = now
-            state[job.job_id] = JobState.READY
-            # the admission waited on any page-outs that freed its bytes
-            if pending_out_cost[0]:
-                transfer_delay[job.job_id] = (
-                    transfer_delay.get(job.job_id, 0.0) + pending_out_cost[0]
-                )
-                pending_out_cost[0] = 0.0
-
-        def on_mem_event(ev: MemoryEvent):
-            if ev.kind is MemoryEventKind.PAGE_OUT:
-                state[ev.job_id] = JobState.PAGED
-                stats[ev.job_id].page_outs += 1
-                stats[ev.job_id].transfer_time += ev.cost
-                pending_out_cost[0] += ev.cost
-            elif ev.kind is MemoryEventKind.PAGE_IN:
-                state[ev.job_id] = JobState.READY
-                stats[ev.job_id].page_ins += 1
-                stats[ev.job_id].transfer_time += ev.cost
-                transfer_delay[ev.job_id] = (
-                    transfer_delay.get(ev.job_id, 0.0) + ev.cost
-                )
-            elif ev.kind is MemoryEventKind.REJECT:
-                stats[ev.job_id].rejected = True
-                state[ev.job_id] = JobState.FINISHED
-            elif ev.kind is MemoryEventKind.SECOND_CHANCE:
-                stats[ev.job_id].second_chances = mm.chances.get(ev.job_id, 0)
-
-        mm.on_admit = on_admit
-        mm.on_event = on_mem_event
-
-        def handle(ev: _Event) -> bool:
-            """Process one event. Returns False for *stale* request events —
-            wake-ups that cannot change runnability (the service is finished,
-            or backlogged so its head request already arrived). Stale events
-            must not trigger idle boundary ticks below: the executor only
-            visits head-of-queue request instants (``_next_request_time``),
-            and tick counts feed deficit/chances accounting, so an extra
-            tick here would fork the two engines' decision sequences."""
-            if ev.kind == "arrival":
-                mm.job_arrive(ev.job, now, busy())  # may admit (on_admit fires)
-            elif ev.kind == "request":
-                if state[ev.job.job_id] is JobState.FINISHED:
-                    return False
-                nxt = ev.job.next_request_time(stats[ev.job.job_id].iterations_done)
-                return nxt is not None and max(nxt, ev.job.arrival_time) == ev.time
-            elif ev.kind == "iter_done":
-                job = ev.job
-                lane = reg.assignment[job.job_id]
-                j, start = running_iter.pop(lane.lane_id)
-                assert j is job
-                st = stats[job.job_id]
-                st.iterations_done += 1
-                st.service_time += now - start
-                st.last_run_end = now
-                if job.request_times is not None:
-                    # request latency = completion - request arrival
-                    # (queueing + service, the Fig. 9/10 SLO metric)
-                    st.request_latencies.append(
-                        now - job.request_times[st.iterations_done - 1]
-                    )
-                records.append(
-                    IterationRecord(job.job_id, st.iterations_done - 1, start, now, lane.lane_id)
-                )
-                if st.iterations_done >= job.n_iters:
-                    state[job.job_id] = JobState.FINISHED
-                    st.finish_time = now
-                    last_ran[0] = None
-                    mm.job_finish(job, now, busy())  # frees lane / admits queued
-                else:
-                    state[job.job_id] = JobState.READY
-                    last_ran[0] = job.job_id
-                # second-chance tick: re-admit / page at the boundary
-                mm.iteration_boundary(now, busy())
-            return True
-
-        while events:
-            if until is not None and events[0].time > until:
-                # horizon reached: clamp the clock to the horizon instead of
-                # letting it (and makespan / final-sweep bookkeeping) reflect
-                # a timestamp past ``until``
-                now = until
-                break
-            ev = heapq.heappop(events)
-            now = ev.time
-            live = handle(ev)
+            ev = heapq.heappop(self._events)
+            self._now = max(self._now, ev.time)
+            live = self._handle(ev)
             # drain every simultaneous event before scheduling: a batch of
             # same-instant arrivals must all be visible to the policy before
             # an iteration starts (the executor likewise submits a whole
             # batch before its first scheduling decision)
-            while events and events[0].time == now:
-                live = handle(heapq.heappop(events)) or live
-            schedule()
-            # idle boundary ticks: if nothing is in flight the ephemeral
-            # region is empty device-wide, so admission/paging may proceed
-            # right now instead of waiting for an iteration to end (open-loop
-            # gaps would otherwise strand queued/paged jobs). The executor's
-            # idle branch runs the exact same tick-until-quiescent loop.
-            # Skipped at stale-request instants the executor never visits.
-            while (
-                live
-                and not running_iter
-                and (reg.queue or reg.paged)
-                and mm.iteration_boundary(now, busy())
-            ):
-                schedule()
+            while self._events and self._events[0].time == ev.time:
+                live = self._handle(heapq.heappop(self._events)) or live
+            self._schedule()
+            self._idle_ticks(live)
+        if until is not None:
+            self._now = max(self._now, until)
 
+    def drain_running(self) -> None:
+        """Let in-flight iterations finish — processing their boundary ticks
+        and any simultaneous arrivals — WITHOUT starting new ones. After
+        this the device is quiescent (no ephemeral memory in use), the safe
+        point for cross-device migration. Mirrors the executor finishing
+        its current sweep after the epoch-loop condition trips."""
+        while self._running_iter and self._events:
+            ev = heapq.heappop(self._events)
+            self._now = max(self._now, ev.time)
+            self._handle(ev)
+
+    def result(self) -> SimResult:
+        """Snapshot the run into a :class:`SimResult` (idempotent)."""
+        mm = self.memory
         # jobs still pending at the end never saw a SECOND_CHANCE admit;
         # surface their failed re-admission rounds in the per-job record
-        for jid, st in stats.items():
+        for jid, st in self._stats.items():
             st.second_chances = max(st.second_chances, mm.chances.get(jid, 0))
-        makespan = max((s.finish_time or now) for s in stats.values()) if stats else 0.0
+        makespan = (
+            max((s.finish_time or self._now) for s in self._stats.values())
+            if self._stats
+            else 0.0
+        )
         return SimResult(
-            stats,
-            {j.job_id: j for j in jobs},
-            records,
+            self._stats,
+            dict(self._jobs),
+            self._records,
             makespan,
             mm.stats(),
             memory_events=mm.events,
-            decision_log=mm.decision_log(),
+            decision_log=DecisionLog(mm.decision_log()),
         )
+
+    # ------------------------------------------------------------------
+    # Migration / re-placement surface (driven by the Cluster at quiescent
+    # epoch boundaries; see cluster.py)
+    # ------------------------------------------------------------------
+
+    def migrate_out(self, job: JobSpec) -> Tuple[JobStats, float]:
+        """Remove ``job`` from this device for migration. Returns its stats
+        (carried to the destination: JCT spans devices) and the pending
+        delay the destination must charge before its next iteration — the
+        MIGRATE_OUT transfer plus any paging delay already owed here."""
+        jid = job.job_id
+        st_state = self._state.get(jid)
+        if st_state is None:
+            raise RuntimeError(f"migrate_out of unknown job {job.name}")
+        if st_state is JobState.RUNNING:
+            raise RuntimeError(
+                f"migrate_out of RUNNING job {job.name}: migrations happen at "
+                "iteration boundaries only (drain first)"
+            )
+        cost = self.memory.migrate_out(job, self._now)  # logs; charges stats
+        st = self._stats.pop(jid)
+        self._state.pop(jid)
+        self._jobs.pop(jid, None)
+        carry = self._transfer_delay.pop(jid, 0.0)
+        self._gen[jid] = self._gen.get(jid, 0) + 1  # stale its queued events
+        self._arrived.discard(jid)
+        if self._last_ran == jid:
+            self._last_ran = None
+        return st, cost + carry
+
+    def migrate_in(
+        self,
+        job: JobSpec,
+        st: JobStats,
+        now: Optional[float] = None,
+        extra_delay: float = 0.0,
+    ) -> Optional[Lane]:
+        """Land a migrated job here, carrying its stats object so the job
+        appears in exactly one device's final accounting. ``extra_delay`` is
+        the source-side cost from ``migrate_out``; together with the
+        MIGRATE_IN transfer it delays the job's first iteration here."""
+        jid = job.job_id
+        if now is not None:
+            self._now = max(self._now, now)
+        self._jobs[jid] = job
+        self._stats[jid] = st
+        self._state[jid] = JobState.QUEUED
+        self._arrived.add(jid)
+        if extra_delay:
+            self._transfer_delay[jid] = (
+                self._transfer_delay.get(jid, 0.0) + extra_delay
+            )
+        gen = self._gen.get(jid, 0)
+        if job.request_times:
+            # future requests need wake events here; the already-arrived
+            # backlog is visible to candidate scans without one (neither
+            # engine revisits past request instants after a migration)
+            for k in range(st.iterations_done, len(job.request_times)):
+                rt = job.request_times[k]
+                if rt > self._now:
+                    heapq.heappush(
+                        self._events,
+                        _Event(rt, next(self._seq), "request", job, gen),
+                    )
+        # logs MIGRATE_IN (the on-event hook charges its transfer delay),
+        # then the ordinary admission path: admit / queue / reject
+        return self.memory.migrate_in(job, self._now, self._busy())
+
+    def add_pending(self, job: JobSpec) -> None:
+        """Bind a not-yet-arrived job to this device: bookkeeping + arrival
+        (and request) events. Used at start() and by placement amendments."""
+        self._jobs[job.job_id] = job
+        self._stats[job.job_id] = JobStats(arrival_time=job.arrival_time)
+        self._state[job.job_id] = JobState.QUEUED
+        gen = self._gen.get(job.job_id, 0)
+        heapq.heappush(
+            self._events,
+            _Event(job.arrival_time, next(self._seq), "arrival", job, gen),
+        )
+        if job.request_times:
+            # open-loop services: each request arrival is an event that
+            # wakes the scheduler (requests queue; they are not
+            # always-ready iterations)
+            for rt in job.request_times:
+                heapq.heappush(
+                    self._events,
+                    _Event(
+                        max(rt, job.arrival_time), next(self._seq), "request", job, gen
+                    ),
+                )
+
+    def remove_pending(self, job: JobSpec) -> None:
+        """Un-bind a job whose arrival has NOT been processed yet (placement
+        amendment at a rebalance boundary). Its queued events go stale via
+        the generation stamp."""
+        jid = job.job_id
+        if jid in self._arrived:
+            raise RuntimeError(
+                f"remove_pending of already-arrived job {job.name}; migrate instead"
+            )
+        self._jobs.pop(jid, None)
+        self._stats.pop(jid, None)
+        self._state.pop(jid, None)
+        self._gen[jid] = self._gen.get(jid, 0) + 1
+
+    # ------------------------------------------------------------------
+    # Internals (the PR-4 run() loop, as instance state)
+    # ------------------------------------------------------------------
+
+    def _active_utilization(self) -> float:
+        return sum(j.utilization for j, _ in self._running_iter.values())
+
+    def _busy(self) -> frozenset:
+        return frozenset(j.job_id for j, _ in self._running_iter.values())
+
+    def _candidates_in(self, lane: Lane) -> List[JobSpec]:
+        return [
+            j
+            for j in lane.jobs
+            if self._state[j.job_id] in (JobState.READY, JobState.PAUSED)
+            and j.request_pending(self._stats[j.job_id].iterations_done, self._now)
+        ]
+
+    def _start_iteration(self, lane: Lane, job: JobSpec) -> None:
+        st = self._stats[job.job_id]
+        if st.first_run_time is None:
+            st.first_run_time = self._now
+        self._state[job.job_id] = JobState.RUNNING
+        overhead = 0.0
+        # switch detection: device-wide for exclusive policies, per-lane
+        # (per GPU stream) for concurrent ones
+        switch_key = 0 if self.policy.exclusive else lane.lane_id
+        if self.switch_overhead and self._last_on_device.get(switch_key) != job.job_id:
+            overhead = self.switch_overhead
+        self._last_on_device[switch_key] = job.job_id
+        # contention freeze at start (see module docstring)
+        contention = max(1.0, self._active_utilization() + job.utilization)
+        # paging/migration transfers delay the affected job's next iteration
+        dur = (
+            job.iter_time * contention
+            + overhead
+            + self._transfer_delay.pop(job.job_id, 0.0)
+        )
+        self._running_iter[lane.lane_id] = (job, self._now)
+        heapq.heappush(
+            self._events,
+            _Event(
+                self._now + dur,
+                next(self._seq),
+                "iter_done",
+                job,
+                self._gen.get(job.job_id, 0),
+            ),
+        )
+
+    def _schedule(self) -> None:
+        """Fill idle lanes (or the idle device, for exclusive policies)."""
+        reg, policy = self.registry, self.policy
+        if policy.exclusive:
+            if self._running_iter:
+                # iteration-granularity preemption: let it finish
+                return
+            ready = [
+                j for lane in reg.lanes.values() for j in self._candidates_in(lane)
+            ]
+            job = policy.select(
+                ready, self._stats, self._now, blocked=frozenset(reg.paged)
+            )
+            if job is not None:
+                lane = reg.assignment[job.job_id]
+                # genuine preemption = running -> paused displacement:
+                # only the job whose iteration just ended, still wanting
+                # the device (it is a candidate), loses the pick to
+                # another job. Bystanders merely waiting their turn are
+                # not preempted and stay READY.
+                prev = self._last_ran
+                if (
+                    prev is not None
+                    and prev != job.job_id
+                    and any(o.job_id == prev for o in ready)
+                ):
+                    self._state[prev] = JobState.PAUSED
+                    self._stats[prev].preemptions += 1
+                self._start_iteration(lane, job)
+            else:
+                # device going idle: the previous runner yielded with
+                # nothing runnable, so whatever runs after the gap
+                # displaces no one
+                self._last_ran = None
+            return
+        for lane in list(reg.lanes.values()):
+            if lane.lane_id in self._running_iter:
+                continue
+            job = policy.select(
+                self._candidates_in(lane),
+                self._stats,
+                self._now,
+                blocked=frozenset(reg.paged),
+            )
+            if job is not None:
+                self._start_iteration(lane, job)
+
+    def _idle_ticks(self, live: bool) -> None:
+        """Idle boundary ticks: if nothing is in flight the ephemeral region
+        is empty device-wide, so admission/paging may proceed right now
+        instead of waiting for an iteration to end (open-loop gaps would
+        otherwise strand queued/paged jobs). The executor's idle branch runs
+        the exact same tick-until-quiescent loop. Skipped at stale-request
+        instants the executor never visits."""
+        reg, mm = self.registry, self.memory
+        while (
+            live
+            and not self._running_iter
+            and (reg.queue or reg.paged)
+            and mm.iteration_boundary(self._now, self._busy())
+        ):
+            self._schedule()
+
+    def _on_admit(self, job: JobSpec, lane: Lane) -> None:
+        st = self._stats[job.job_id]
+        if st.admit_time is None:
+            st.admit_time = self._now
+        self._state[job.job_id] = JobState.READY
+        # the admission waited on any page-outs that freed its bytes
+        if self._pending_out_cost:
+            self._transfer_delay[job.job_id] = (
+                self._transfer_delay.get(job.job_id, 0.0) + self._pending_out_cost
+            )
+            self._pending_out_cost = 0.0
+
+    def _on_mem_event(self, ev: MemoryEvent) -> None:
+        if ev.kind is MemoryEventKind.PAGE_OUT:
+            self._state[ev.job_id] = JobState.PAGED
+            self._stats[ev.job_id].page_outs += 1
+            self._stats[ev.job_id].transfer_time += ev.cost
+            self._pending_out_cost += ev.cost
+        elif ev.kind is MemoryEventKind.PAGE_IN:
+            self._state[ev.job_id] = JobState.READY
+            self._stats[ev.job_id].page_ins += 1
+            self._stats[ev.job_id].transfer_time += ev.cost
+            self._transfer_delay[ev.job_id] = (
+                self._transfer_delay.get(ev.job_id, 0.0) + ev.cost
+            )
+        elif ev.kind is MemoryEventKind.REJECT:
+            self._stats[ev.job_id].rejected = True
+            self._state[ev.job_id] = JobState.FINISHED
+        elif ev.kind is MemoryEventKind.SECOND_CHANCE:
+            self._stats[ev.job_id].second_chances = self.memory.chances.get(
+                ev.job_id, 0
+            )
+        elif ev.kind is MemoryEventKind.MIGRATE_OUT:
+            # stats still present (popped after the mm call); the cost is
+            # charged as a delay on the destination via migrate_out's return
+            self._stats[ev.job_id].transfer_time += ev.cost
+        elif ev.kind is MemoryEventKind.MIGRATE_IN:
+            self._stats[ev.job_id].transfer_time += ev.cost
+            self._transfer_delay[ev.job_id] = (
+                self._transfer_delay.get(ev.job_id, 0.0) + ev.cost
+            )
+
+    def _handle(self, ev: _Event) -> bool:
+        """Process one event. Returns False for *stale* events — wake-ups
+        that cannot change runnability (a migrated-away job's leftovers, or
+        a request whose service is finished or backlogged so its head
+        request already arrived). Stale events must not trigger idle
+        boundary ticks: the executor only visits head-of-queue request
+        instants (``_next_request_time``), and tick counts feed
+        deficit/chances accounting, so an extra tick here would fork the
+        two engines' decision sequences."""
+        if ev.gen != self._gen.get(ev.job.job_id, 0):
+            return False  # job migrated / re-placed away since this was queued
+        if ev.kind == "arrival":
+            self._arrived.add(ev.job.job_id)
+            # may admit (on_admit fires)
+            self.memory.job_arrive(ev.job, self._now, self._busy())
+        elif ev.kind == "request":
+            if self._state[ev.job.job_id] is JobState.FINISHED:
+                return False
+            nxt = ev.job.next_request_time(
+                self._stats[ev.job.job_id].iterations_done
+            )
+            return nxt is not None and max(nxt, ev.job.arrival_time) == ev.time
+        elif ev.kind == "iter_done":
+            job = ev.job
+            lane = self.registry.assignment[job.job_id]
+            j, start = self._running_iter.pop(lane.lane_id)
+            assert j is job
+            st = self._stats[job.job_id]
+            st.iterations_done += 1
+            st.service_time += self._now - start
+            st.last_run_end = self._now
+            if job.request_times is not None:
+                # request latency = completion - request arrival
+                # (queueing + service, the Fig. 9/10 SLO metric)
+                st.request_latencies.append(
+                    self._now - job.request_times[st.iterations_done - 1]
+                )
+            self._records.append(
+                IterationRecord(
+                    job.job_id, st.iterations_done - 1, start, self._now, lane.lane_id
+                )
+            )
+            if st.iterations_done >= job.n_iters:
+                self._state[job.job_id] = JobState.FINISHED
+                st.finish_time = self._now
+                self._last_ran = None
+                # frees lane / admits queued
+                self.memory.job_finish(job, self._now, self._busy())
+            else:
+                self._state[job.job_id] = JobState.READY
+                self._last_ran = job.job_id
+            # second-chance tick: re-admit / page at the boundary
+            self.memory.iteration_boundary(self._now, self._busy())
+        return True

@@ -12,7 +12,7 @@ import random
 from typing import List, Optional
 
 from repro.core.profiles import PAPER_WORKLOADS, inference_profile, paper_job
-from repro.core.types import JobSpec
+from repro.core.types import GB, JobSpec, MemoryProfile
 
 # Low-utilization models dominate packed serving (paper §5.3): these are the
 # default service pool for open-loop request traces.
@@ -153,6 +153,80 @@ def request_trace(
         job.iter_time = round(iter_time, 9)
         job.name = f"train:{train_background}"
         jobs.append(job)
+    return jobs
+
+
+def churn_trace(
+    n_devices: int = 3,
+    seed: int = 42,
+    capacity: int = 16 * GB,
+    pairs: Optional[int] = None,
+    iter_time: float = 1.0,
+    long_iters: int = 2000,
+    short_iters: int = 150,
+    big_arrival: float = 300.0,
+    big_iters: int = 50,
+) -> List[JobSpec]:
+    """Fragmentation-by-churn trace for the migration/defrag benchmarks.
+
+    ``pairs`` (default ``n_devices - 1``) long jobs plus as many short
+    churn jobs arrive at t=0, emitted as ``long0, short..., long...`` —
+    the order matters because arrival placement is submission-order
+    sensitive: consolidate packs ``long0`` and the shorts together (a
+    frag job is P+E = 0.4 C), leaving each remaining long straggler
+    *alone* on its own device. When the shorts drain, the fleet is
+    fragmented: stragglers spread one per device, none leaving room for
+    the late ``big`` job (P+E ≈ 0.94 C) — so arrival-only placement must
+    open a fresh device for it. A consolidate rebalance pass instead
+    merges the stragglers onto fewer devices and the boundary
+    re-placement amendment lands ``big`` on a freed (already-used) one,
+    shrinking ``devices_used`` — the defrag-by-migration headline the
+    migration benchmark measures.
+
+    Deterministic in the seed (only iteration-count jitter is random).
+    Defaults are tuned for ``rebalance_interval`` between the short jobs'
+    drain (~``short_iters * iter_time``) and ``big_arrival``.
+    """
+    if n_devices < 2:
+        raise ValueError(f"churn_trace needs >= 2 devices, got {n_devices}")
+    rng = random.Random(seed)
+    frag = MemoryProfile(int(0.15 * capacity), int(0.25 * capacity))
+    big = MemoryProfile(int(0.375 * capacity), int(0.5625 * capacity))
+    pairs = max(1, n_devices - 1) if pairs is None else pairs
+
+    def long_job(i: int) -> JobSpec:
+        return JobSpec(
+            name=f"long{i}",
+            profile=frag,
+            n_iters=long_iters + rng.randrange(0, long_iters // 10 + 1),
+            iter_time=iter_time,
+            utilization=0.4,
+            arrival_time=0.0,
+        )
+
+    def short_job(i: int) -> JobSpec:
+        return JobSpec(
+            name=f"short{i}",
+            profile=frag,
+            n_iters=max(5, short_iters - rng.randrange(0, short_iters // 5 + 1)),
+            iter_time=iter_time,
+            utilization=0.4,
+            arrival_time=0.0,
+        )
+
+    jobs: List[JobSpec] = [long_job(0)]
+    jobs.extend(short_job(i) for i in range(pairs))
+    jobs.extend(long_job(i) for i in range(1, pairs))
+    jobs.append(
+        JobSpec(
+            name="big",
+            profile=big,
+            n_iters=big_iters,
+            iter_time=iter_time,
+            utilization=0.6,
+            arrival_time=big_arrival,
+        )
+    )
     return jobs
 
 

@@ -148,6 +148,8 @@ class MemoryEventKind(enum.Enum):
     PAGE_IN = "page_in"  # persistent region moved host -> device
     REJECT = "reject"  # can never fit (P + E > C)
     LANE_MOVED = "lane_moved"  # auto-defrag relocated a lane (zero-copy)
+    MIGRATE_OUT = "migrate_out"  # job departed this device for another
+    MIGRATE_IN = "migrate_in"  # job arrived from another device
 
 
 @dataclass
@@ -186,6 +188,7 @@ class JobStats:
     page_ins: int = 0
     transfer_time: float = 0.0  # seconds spent moving P across the host link
     second_chances: int = 0  # failed re-admission rounds while pending
+    migrations: int = 0  # completed cross-device moves (rebalance passes)
     rejected: bool = False  # can never fit (P + E > C)
     failed: bool = False  # step_fn raised in the live executor
     last_run_end: Optional[float] = None  # end of the most recent iteration

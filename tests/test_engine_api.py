@@ -1,0 +1,199 @@
+"""Unified Engine API tests (ISSUE 6 satellite).
+
+Every execution backend — Simulator, SalusExecutor, Cluster,
+ClusterExecutor — satisfies the :class:`Engine` protocol
+(``submit``/``run``/``result``/``decision_log``), and every result type —
+SimResult, ExecutorReport, ClusterResult, ClusterReport — carries the
+:class:`ResultSurface` accessor set, so benchmarks and tests can be
+written once against the protocol. Also locks the dual decision_log API
+(list field AND callable) and the case-insensitive string/enum lookup
+contract shared by ``get_policy`` and ``get_strategy``.
+"""
+import time
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    GB,
+    Cluster,
+    ClusterExecutor,
+    DecisionLog,
+    Engine,
+    JobSpec,
+    MemoryProfile,
+    PlacementStrategy,
+    ResultSurface,
+    SalusExecutor,
+    Simulator,
+    SRTF,
+    get_policy,
+    get_strategy,
+)
+from repro.core.scheduler import PACK
+from repro.core.session import Session
+
+CAP = int(16 * GB)
+PROF = MemoryProfile(int(2 * GB), int(3 * GB))
+
+
+def jobs(n=3, n_iters=4, iter_time=0.002):
+    return [
+        JobSpec(
+            name=f"j{i}",
+            profile=PROF,
+            n_iters=n_iters,
+            iter_time=iter_time,
+            utilization=1.0,
+            arrival_time=0.0,
+        )
+        for i in range(n)
+    ]
+
+
+def sessions(n=2, n_iters=3, iter_time=0.002):
+    out = []
+    for i in range(n):
+
+        def step(state, batch, _t=iter_time):
+            time.sleep(_t)
+            return state
+
+        out.append(
+            Session(
+                f"s{i}",
+                step,
+                jnp.zeros((4,), jnp.float32),
+                lambda i: None,
+                n_iters,
+                profile=PROF,
+                iter_time=iter_time,
+                utilization=1.0,
+                arrival_time=0.0,
+            )
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Engine protocol
+# ---------------------------------------------------------------------------
+
+
+def test_all_backends_satisfy_engine_protocol():
+    assert isinstance(Simulator(CAP, get_policy("srtf")), Engine)
+    assert isinstance(SalusExecutor(CAP, get_policy("srtf")), Engine)
+    assert isinstance(Cluster(2, CAP, "srtf"), Engine)
+    assert isinstance(ClusterExecutor(2, CAP, "srtf"), Engine)
+
+
+def test_engine_generic_driver_runs_either_single_device_backend():
+    """One driver function, written against the protocol, handed both
+    backends: submit work, run, read the unified result surface."""
+
+    def drive(engine, work):
+        for w in work:
+            engine.submit(w)
+        engine.run()
+        res = engine.result()
+        return res.completed, res.avg_jct, engine.decision_log()
+
+    n_sim, jct_sim, log_sim = drive(
+        Simulator(CAP, get_policy("srtf")), jobs(n=2, n_iters=3)
+    )
+    n_ex, jct_ex, log_ex = drive(
+        SalusExecutor(CAP, get_policy("srtf"), accounting="nominal"),
+        sessions(n=2, n_iters=3),
+    )
+    assert n_sim == n_ex == 2
+    assert jct_sim > 0 and jct_ex > 0
+    # same admission decisions from the shared MemoryManager
+    assert [e[0] for e in log_sim] == [e[0] for e in log_ex]
+
+
+# ---------------------------------------------------------------------------
+# ResultSurface on all four result types
+# ---------------------------------------------------------------------------
+
+
+def _check_surface(res, n_jobs):
+    assert isinstance(res, ResultSurface)
+    assert res.completed == n_jobs
+    assert len(res.per_job) == n_jobs
+    assert res.per_job == res.stats
+    assert len(res.jcts) == n_jobs
+    assert res.avg_jct > 0
+    assert res.p95_jct >= max(res.jcts) * 0.99 or res.p95_jct in res.jcts
+    assert 0.0 <= res.utilization
+    assert res.makespan > 0
+    assert isinstance(res.request_latencies, list)
+
+
+def test_result_surface_simulator():
+    _check_surface(Simulator(CAP, get_policy("srtf")).run(jobs(3)), 3)
+
+
+def test_result_surface_executor():
+    ex = SalusExecutor(CAP, get_policy("srtf"), accounting="nominal")
+    for s in sessions(2):
+        ex.submit(s)
+    _check_surface(ex.run(), 2)
+
+
+def test_result_surface_cluster():
+    res = Cluster(2, CAP, "srtf").run(jobs(4))
+    _check_surface(res, 4)
+    assert len(res.per_device_utilization) == 2
+    assert res.devices_used >= 1
+    assert res.migrations == []
+
+
+def test_result_surface_cluster_executor():
+    cex = ClusterExecutor(2, CAP, "srtf", accounting="nominal")
+    for s in sessions(3):
+        cex.submit(s)
+    rep = cex.run()
+    _check_surface(rep, 3)
+    assert not rep.failures
+    assert rep.migrations == []
+
+
+# ---------------------------------------------------------------------------
+# DecisionLog dual API
+# ---------------------------------------------------------------------------
+
+
+def test_decision_log_is_list_and_callable():
+    res = Simulator(CAP, get_policy("srtf")).run(jobs(2))
+    log = res.decision_log
+    assert isinstance(log, DecisionLog) and isinstance(log, list)
+    assert log() == list(log)  # callable form == field form
+    assert log and log[0][0] == "admit"
+    fleet = Cluster(2, CAP, "srtf").run(jobs(2))
+    assert fleet.decision_log() == list(fleet.decision_log)
+
+
+# ---------------------------------------------------------------------------
+# Lookup contract: get_policy / get_strategy
+# ---------------------------------------------------------------------------
+
+
+def test_lookups_accept_enums_instances_and_any_case():
+    assert isinstance(get_policy("SRTF"), SRTF)
+    assert isinstance(get_policy("Pack"), PACK)
+    pol = SRTF()
+    assert get_policy(pol) is pol
+    assert get_strategy("CONSOLIDATE") is PlacementStrategy.CONSOLIDATE
+    assert get_strategy("Best_Fit") is PlacementStrategy.BEST_FIT
+    assert get_strategy(PlacementStrategy.LEAST_LOADED) is PlacementStrategy.LEAST_LOADED
+
+
+def test_lookups_raise_keyerror_for_unknown_typeerror_for_junk():
+    with pytest.raises(KeyError):
+        get_policy("edf")
+    with pytest.raises(KeyError):
+        get_strategy("round_robin")
+    with pytest.raises(TypeError):
+        get_policy(3.14)
+    with pytest.raises(TypeError):
+        get_strategy(3.14)

@@ -1,0 +1,360 @@
+"""Live migration + defrag-by-migration tests (ISSUE 6 tentpole).
+
+Covers: Rebalancer unit semantics on hand-built DeviceViews (consolidate
+all-or-nothing source evacuation, maintenance drain bypassing eligibility
+caps, threshold-gated rebalance, per-job caps, telemetry damping), the
+simulator-side defrag acceptance scenario (consolidate + boundary
+re-placement strictly shrinks ``devices_used`` on the churn trace, with
+the migration transfer cost visible in the migrated job's JCT), the epoch
+loop's neutrality when no migrations are decided (chopped run bitwise
+equal to the unchopped PR-4 path), migration conservation under injected
+mid-migration failures (FailureInjector: the job is rolled back to its
+source and still completes), and the cross-engine migration differential:
+Cluster and ClusterExecutor must produce *identical* migration logs and
+per-device decision logs under ``accounting="nominal"`` with an exclusive
+policy (the executor's device-wide serial virtual clock chops epochs
+differently from the simulator's parallel lanes under concurrent
+policies, so lockstep parity is an exclusive-policy contract — same
+restriction the single-device differential suite states).
+"""
+import time
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    GB,
+    Cluster,
+    ClusterExecutor,
+    DeviceView,
+    JobSpec,
+    JobView,
+    LaneRegistry,
+    MemoryConfig,
+    MemoryProfile,
+    Rebalancer,
+)
+from repro.core.session import Session
+from repro.core.tracegen import churn_trace
+from repro.dist.fault import FailureInjector
+
+CAP = int(16 * GB)
+
+
+def job(name, p_gb, e_gb, n_iters=10, iter_time=1.0, arrival=0.0, util=0.4):
+    return JobSpec(
+        name=name,
+        profile=MemoryProfile(int(p_gb * GB), int(e_gb * GB)),
+        n_iters=n_iters,
+        iter_time=iter_time,
+        arrival_time=arrival,
+        utilization=util,
+    )
+
+
+def view(device_id, specs, cap=CAP, dilation=1.0, sigma=0.0, **jv_kw):
+    """Hand-built DeviceView: every spec is resident on a fresh registry."""
+    reg = LaneRegistry(cap)
+    jvs = []
+    for s in specs:
+        assert reg.job_arrive(s) is not None
+        jvs.append(JobView(s, **jv_kw))
+    return DeviceView(device_id, cap, reg, jvs, dilation, sigma)
+
+
+# ---------------------------------------------------------------------------
+# Rebalancer unit semantics (decisions only, no engine)
+# ---------------------------------------------------------------------------
+
+
+def test_consolidate_evacuates_cheapest_source():
+    """dev1 holds the lone short straggler -> it is merged into dev0."""
+    views = [
+        view(0, [job("longA", 2.4, 4.0, n_iters=100)]),
+        view(1, [job("shortB", 2.4, 4.0, n_iters=10)]),
+        view(2, []),
+    ]
+    migs = Rebalancer(mode="consolidate").decide(views)
+    assert [(m.name, m.src, m.dst, m.reason) for m in migs] == [
+        ("shortB", 1, 0, "consolidate")
+    ]
+
+
+def test_consolidate_is_all_or_nothing():
+    """A source whose jobs cannot ALL fit elsewhere is left untouched —
+    a half-evacuated device frees no capacity."""
+    views = [
+        view(0, [job("anchor", 4.0, 5.0, n_iters=1000)]),
+        # X alone fits next to anchor; X + Y together do not
+        view(1, [job("X", 2.4, 4.0, n_iters=10), job("Y", 2.4, 4.0, n_iters=10)]),
+    ]
+    # sanity: a lone X WOULD be admitted beside anchor
+    single = [
+        view(0, [job("anchor", 4.0, 5.0, n_iters=1000)]),
+        view(1, [job("X", 2.4, 4.0, n_iters=10)]),
+    ]
+    assert Rebalancer(mode="consolidate").decide(single) != []
+    assert Rebalancer(mode="consolidate").decide(views) == []
+
+
+def test_consolidate_skips_immovable_and_finished_sources():
+    """A source is only evacuated when ALL of its jobs are eligible: a
+    mid-iteration (immovable) or nearly-finished job pins its device."""
+    views = [
+        view(0, [job("pinned", 2.4, 4.0, n_iters=100)], done=99),  # < min_remaining
+        view(1, [job("running", 2.4, 4.0, n_iters=100)], movable=False),
+    ]
+    assert Rebalancer(mode="consolidate", min_remaining_iters=2).decide(views) == []
+
+
+def test_drain_bypasses_eligibility_caps():
+    """Maintenance wins: a job at its migration cap, one iteration from
+    the end, still leaves a drained device."""
+    views = [
+        view(0, [job("sticky", 2.4, 4.0, n_iters=10)], done=9, migrations=3),
+        view(1, []),
+    ]
+    migs = Rebalancer(mode="none", drain=(0,)).decide(views)
+    assert [(m.name, m.src, m.dst, m.reason) for m in migs] == [
+        ("sticky", 0, 1, "drain")
+    ]
+    # drained devices are never destinations
+    views = [
+        view(0, [job("a", 2.4, 4.0)]),
+        view(1, [job("b", 2.4, 4.0)]),
+    ]
+    migs = Rebalancer(mode="consolidate", drain=(0,)).decide(views)
+    assert all(m.dst != 0 for m in migs) and any(m.src == 0 for m in migs)
+
+
+def test_rebalance_respects_imbalance_threshold():
+    near = [
+        view(0, [job("a", 1.6, 2.4, n_iters=100)]),
+        view(1, [job("b", 1.6, 2.4, n_iters=90)]),
+    ]
+    assert Rebalancer(mode="rebalance", imbalance_threshold=0.25).decide(near) == []
+    skew = [
+        view(0, [job(f"a{i}", 1.6, 2.4, n_iters=100) for i in range(3)]),
+        view(1, []),
+    ]
+    migs = Rebalancer(mode="rebalance", imbalance_threshold=0.25).decide(skew)
+    assert migs and all(m.src == 0 and m.dst == 1 and m.reason == "rebalance" for m in migs)
+
+
+def test_rebalance_caps_per_job_migrations():
+    skew = [
+        view(0, [job(f"a{i}", 1.6, 2.4, n_iters=100) for i in range(3)], migrations=3),
+        view(1, []),
+    ]
+    assert Rebalancer(mode="rebalance", max_migrations_per_job=3).decide(skew) == []
+
+
+def test_rebalance_telemetry_damping_does_not_overshoot():
+    """The bench_migration contention scenario in miniature: 4 contending
+    jobs measured at 2.4x dilation on dev0, dev1 idle. Stale telemetry
+    applied verbatim would push 3 jobs across (then bounce them back next
+    epoch); the contention-pressure rescaling stops at the even split."""
+    specs = [job(f"t{i}", 1.6, 2.4, n_iters=100, util=0.6) for i in range(4)]
+    views = [view(0, specs, dilation=2.4), view(1, [], dilation=1.0)]
+    migs = Rebalancer(mode="rebalance", use_telemetry=True).decide(views)
+    assert len(migs) == 2
+    assert all(m.src == 0 and m.dst == 1 for m in migs)
+
+
+def test_rebalancer_rejects_bad_config():
+    with pytest.raises(ValueError):
+        Rebalancer(mode="sideways")
+    with pytest.raises(ValueError):
+        Rebalancer(imbalance_threshold=-0.1)
+    with pytest.raises(ValueError):
+        Cluster(2, CAP, "srtf", rebalance_interval=0.0)
+    with pytest.raises(ValueError):
+        Cluster(2, CAP, "srtf", rebalancer=Rebalancer())  # no interval
+
+
+# ---------------------------------------------------------------------------
+# Simulator fleet: defrag acceptance + epoch-loop neutrality + conservation
+# ---------------------------------------------------------------------------
+
+
+def churn(**kw):
+    """bench_migration's --fast churn scenario (validated shape)."""
+    return churn_trace(
+        n_devices=3,
+        capacity=CAP,
+        long_iters=500,
+        short_iters=40,
+        big_arrival=75.0,
+        big_iters=15,
+        **kw,
+    )
+
+
+def test_defrag_by_migration_shrinks_devices_used():
+    arrival = Cluster(3, CAP, "pack", strategy="consolidate").run(churn())
+    rebal = Cluster(
+        3,
+        CAP,
+        "pack",
+        strategy="consolidate",
+        rebalancer=Rebalancer(mode="consolidate"),
+        rebalance_interval=50.0,
+    ).run(churn())
+    assert arrival.completed == rebal.completed == 5
+    # the acceptance criterion: strictly fewer devices ever used
+    assert rebal.devices_used < arrival.devices_used
+    kinds = [k for k, *_ in rebal.migration_log()]
+    assert "migrate" in kinds and "replace" in kinds
+    # the migrated straggler pays the modeled P/page_bandwidth transfer in
+    # its JCT: strictly positive transfer time recorded on its stats
+    moved = [m for m in rebal.migrations if m.reason == "consolidate"]
+    assert moved
+    for m in moved:
+        st = rebal.stats[m.job_id]
+        assert st.migrations >= 1
+        assert st.transfer_time > 0.0
+
+
+def test_epoch_loop_without_migrations_is_bitwise_neutral():
+    """Chopping the fleet into rebalance epochs that decide nothing must
+    reproduce the unchopped (PR-4) run record-for-record."""
+    mk = lambda: [
+        job("a", 2.4, 4.0, n_iters=37, iter_time=1.0),
+        job("b", 2.4, 4.0, n_iters=11, iter_time=1.0),
+        job("c", 2.4, 4.0, n_iters=23, iter_time=1.0),
+        job("d", 6.0, 9.0, n_iters=7, iter_time=1.0),
+    ]
+    plain = Cluster(2, CAP, "srtf", strategy="least_loaded").run(mk())
+    chopped = Cluster(
+        2,
+        CAP,
+        "srtf",
+        strategy="least_loaded",
+        rebalancer=Rebalancer(mode="none"),
+        rebalance_interval=5.0,
+    ).run(mk())
+    assert chopped.migration_log() == []
+    assert plain.decision_log() == chopped.decision_log()
+    key = lambda res: sorted(
+        (res.jobs[r.job_id].name, r.index, r.start, r.end, r.lane_id)
+        for r in res.records
+    )
+    assert key(plain) == key(chopped)
+    assert plain.makespan == chopped.makespan
+
+
+def test_migration_conservation_under_injected_failure():
+    """A mid-migration failure rolls the job back to its source: it is
+    logged MIGRATE_FAILED, never lost, and still runs to completion."""
+    res = Cluster(
+        3,
+        CAP,
+        "pack",
+        strategy="consolidate",
+        rebalancer=Rebalancer(mode="consolidate"),
+        rebalance_interval=50.0,
+        fault_injector=FailureInjector([1]),  # first migration attempt dies
+    ).run(churn())
+    failed = [e for e in res.migration_log() if e[0] == "migrate_failed"]
+    assert len(failed) == 1
+    assert res.completed == 5
+    for jid, st in res.stats.items():
+        assert st.iterations_done == res.jobs[jid].n_iters
+
+
+# ---------------------------------------------------------------------------
+# Cross-engine migration differential (exclusive policy, nominal accounting)
+# ---------------------------------------------------------------------------
+
+SPECS = [("longA", 40), ("medB", 6), ("medC", 6), ("longD", 40)]
+IT = 0.002
+FRAG = MemoryProfile(int(2.4 * GB), int(4.0 * GB))
+
+
+def _diff_jobs():
+    return [
+        JobSpec(
+            name=n,
+            profile=FRAG,
+            n_iters=k,
+            iter_time=IT,
+            utilization=1.0,
+            arrival_time=0.0,
+        )
+        for n, k in SPECS
+    ]
+
+
+def _run_cluster_sim(paging, injector=None):
+    return Cluster(
+        3,
+        CAP,
+        "srtf",
+        strategy="least_loaded",
+        memory=MemoryConfig(paging=paging),
+        rebalancer=Rebalancer(mode="consolidate"),
+        rebalance_interval=0.02,
+        fault_injector=injector,
+    ).run(_diff_jobs())
+
+
+def _run_cluster_exec(paging, injector=None):
+    cex = ClusterExecutor(
+        3,
+        CAP,
+        "srtf",
+        strategy="least_loaded",
+        memory=MemoryConfig(paging=paging),
+        accounting="nominal",
+        rebalancer=Rebalancer(mode="consolidate"),
+        rebalance_interval=0.02,
+        fault_injector=injector,
+    )
+    for n, k in SPECS:
+
+        def step(state, batch, _t=IT):
+            time.sleep(_t)  # stand-in for a real device iteration
+            return state
+
+        cex.submit(
+            Session(
+                n,
+                step,
+                jnp.zeros((4,), jnp.float32),
+                lambda i: None,
+                k,
+                profile=FRAG,
+                iter_time=IT,
+                utilization=1.0,
+                arrival_time=0.0,
+            )
+        )
+    return cex.run()
+
+
+@pytest.mark.parametrize("paging", [False, True])
+def test_migration_differential_sim_vs_executor(paging):
+    rsim = _run_cluster_sim(paging)
+    rex = _run_cluster_exec(paging)
+    assert rsim.migration_log(), "scenario must actually migrate"
+    assert rsim.migration_log() == rex.migration_log()
+    for d in range(3):
+        assert (
+            rsim.device_results[d].decision_log
+            == rex.device_reports[d].decision_log
+        ), f"device {d} decision logs diverge"
+    assert rsim.completed == rex.completed == len(SPECS)
+    # the executor really moved state across virtual devices
+    assert len(rex.migrations) == len([
+        e for e in rex.migration_log() if e[0] == "migrate"
+    ])
+
+
+def test_migration_failure_parity_sim_vs_executor():
+    """Deterministic injection (by migration ordinal) fails identically in
+    both engines: same MIGRATE_FAILED entry, nothing lost on either side."""
+    rsim = _run_cluster_sim(False, injector=FailureInjector([1]))
+    rex = _run_cluster_exec(False, injector=FailureInjector([1]))
+    assert rsim.migration_log() == rex.migration_log()
+    assert any(e[0] == "migrate_failed" for e in rsim.migration_log())
+    assert rsim.completed == rex.completed == len(SPECS)
