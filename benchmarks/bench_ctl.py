@@ -1,0 +1,170 @@
+"""Control-plane overhead: what durable epoch commits cost (repro.ctl).
+
+Three measurements against the same synthetic fleet trace:
+
+1. ``ctl/engine_bare`` — a bare :class:`Cluster` run with rebalance
+   epochs but no persistence: the engine-only baseline.
+2. ``ctl/daemon_durable`` — the same trace through
+   :meth:`CtlDaemon.run_pending_fleets` with a real SQLite store
+   committing progress + decision-log suffixes + lifecycle transitions
+   at every epoch boundary. The derived column reports the overhead
+   factor over the bare engine — the price of surviving a SIGKILL.
+3. ``ctl/epoch_commit`` — the store transaction alone (progress rows +
+   decision append + state writes for a fleet-sized batch), the unit the
+   daemon pays once per epoch.
+4. ``ctl/recover`` — crash mid-fleet (FailureInjector), then measure
+   ``recover()`` + the resumed run to completion.
+
+``--json`` writes the summary dict (CI artifact); ``--fast`` shrinks the
+fleet.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+from typing import List, Optional
+
+from benchmarks.common import base_parser, emit, write_json
+from repro.core import GB, MB, Cluster, JobSpec, MemoryConfig, MemoryProfile
+from repro.ctl import CtlDaemon, CtlState, JobStore
+from repro.dist.fault import FailureInjector, InjectedFailure
+
+EPOCH = 50.0
+
+
+def _trace(n_jobs: int, n_iters: int) -> List[JobSpec]:
+    return [
+        JobSpec(
+            name=f"b{i}",
+            profile=MemoryProfile(200 * MB, 800 * MB),
+            n_iters=n_iters + 5 * (i % 4),
+            iter_time=1.0,
+            arrival_time=10.0 * i,
+        )
+        for i in range(n_jobs)
+    ]
+
+
+def _store_specs(store: JobStore, n_jobs: int, n_iters: int) -> List[int]:
+    ids = []
+    for i in range(n_jobs):
+        spec = {
+            "job_id": store.next_job_id(),
+            "name": f"b{i}",
+            "persistent": 200 * MB,
+            "ephemeral": 800 * MB,
+            "n_iters": n_iters + 5 * (i % 4),
+            "iter_time": 1.0,
+            "arrival_time": 10.0 * i,
+        }
+        ids.append(store.add_job(spec))
+    return ids
+
+
+def _bare(n_jobs: int, n_iters: int, paging: bool, bw: float) -> float:
+    cluster = Cluster(
+        2,
+        int(4 * GB),
+        "fifo",
+        memory=MemoryConfig(paging=paging, page_bandwidth=bw),
+        rebalance_interval=EPOCH,
+    )
+    t0 = time.perf_counter()
+    cluster.run(_trace(n_jobs, n_iters))
+    return (time.perf_counter() - t0) * 1e6
+
+
+def _durable(
+    tmp: str, n_jobs: int, n_iters: int, paging: bool, bw: float,
+    injector: Optional[FailureInjector] = None,
+) -> float:
+    store = JobStore(os.path.join(tmp, f"bench-{time.monotonic_ns()}.sqlite"))
+    ids = _store_specs(store, n_jobs, n_iters)
+    daemon = CtlDaemon(
+        store, epoch=EPOCH, n_devices=2, capacity=int(4 * GB), policy="fifo",
+        paging=paging, page_bandwidth=bw, fault_injector=injector,
+    )
+    t0 = time.perf_counter()
+    if injector is not None:
+        try:
+            daemon.run_pending_fleets()
+        except InjectedFailure:
+            pass  # the crash: now measure recovery + resumed completion
+        d2 = CtlDaemon(
+            store, epoch=EPOCH, n_devices=2, capacity=int(4 * GB),
+            policy="fifo", paging=paging, page_bandwidth=bw,
+        )
+        d2.recover()
+        d2.run_pending_fleets()
+    else:
+        daemon.run_pending_fleets()
+    us = (time.perf_counter() - t0) * 1e6
+    assert all(
+        store.get_job(j)["state"] is CtlState.FINISHED for j in ids
+    ), "bench fleet did not finish"
+    store.close()
+    return us
+
+
+def _epoch_commit(tmp: str, n_jobs: int) -> float:
+    """The per-epoch store transaction in isolation."""
+    store = JobStore(os.path.join(tmp, "commit.sqlite"))
+    ids = _store_specs(store, n_jobs, 1000)
+    for j in ids:
+        store.set_state(j, CtlState.ADMITTED)
+        store.set_state(j, CtlState.RUNNING)
+    done = {j: 0 for j in ids}
+    decisions = [("admit", i, f"b{i}", i % 4) for i in range(n_jobs)]
+    reps = 50
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        with store.transaction():
+            store.append_decisions("device:0", decisions)
+            for j in ids:
+                done[j] += 7
+                store.update_progress(j, done[j])
+    us = (time.perf_counter() - t0) / reps * 1e6
+    store.close()
+    return us
+
+
+def run(argv=None) -> dict:
+    ap = argparse.ArgumentParser(
+        description=__doc__, parents=[base_parser()],
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    args = ap.parse_args(argv)
+    n_jobs = 4 if args.fast else 12
+    n_iters = 40 if args.fast else 150
+    bw = args.page_bandwidth_gbs * GB
+    results = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        bare_us = _bare(n_jobs, n_iters, args.paging, bw)
+        emit("ctl/engine_bare", bare_us, f"jobs={n_jobs}")
+        durable_us = _durable(tmp, n_jobs, n_iters, args.paging, bw)
+        factor = durable_us / bare_us if bare_us > 0 else 0.0
+        emit("ctl/daemon_durable", durable_us, f"overhead_x={factor:.2f}")
+        commit_us = _epoch_commit(tmp, n_jobs)
+        emit("ctl/epoch_commit", commit_us, f"jobs={n_jobs}")
+        recover_us = _durable(
+            tmp, n_jobs, n_iters, args.paging, bw,
+            injector=FailureInjector(steps=[3]),
+        )
+        emit("ctl/recover", recover_us, "crash_at_epoch=3")
+        results = {
+            "n_jobs": n_jobs,
+            "n_iters": n_iters,
+            "engine_bare_us": bare_us,
+            "daemon_durable_us": durable_us,
+            "durable_overhead_x": factor,
+            "epoch_commit_us": commit_us,
+            "crash_recover_run_us": recover_us,
+        }
+    write_json(args.json, results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

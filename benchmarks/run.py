@@ -4,6 +4,7 @@
   table2/fig8  bench_schedulers   FIFO/SRTF/PACK/FAIR on the 100-job trace
   fig5/6       bench_cluster      multi-GPU fleet: placement + per-GPU sharing
   migration    bench_migration    defrag/rebalance/drain via live migration
+  ctl          bench_ctl          control-plane durable epoch-commit overhead
   fig11        bench_fair         3-way fair sharing throughput
   fig12        bench_hyperparam   PACK vs FIFO hyper-parameter makespan
   fig13        bench_inference    inference packing (42 models -> N devices)
@@ -26,6 +27,7 @@ def main() -> None:
         "benchmarks.bench_schedulers",
         "benchmarks.bench_cluster",
         "benchmarks.bench_migration",
+        "benchmarks.bench_ctl",
         "benchmarks.bench_fair",
         "benchmarks.bench_hyperparam",
         "benchmarks.bench_inference",

@@ -43,3 +43,15 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serve \
 echo "== benchmark smoke: live migration (defrag/rebalance/drain regime) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_migration \
     --fast --json experiments/bench_migration_smoke.json
+
+echo "== benchmark smoke: control-plane durable epoch commits =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_ctl \
+    --fast --json experiments/bench_ctl_smoke.json
+
+echo "== ctl-smoke: daemon kill/restart recovery via repro-ctl =="
+# starts a real daemon, submits a 3-job trace over the CLI, SIGKILLs it
+# mid-fleet, restarts on the same store, and asserts recovery (decision-log
+# prefix consistency, no lost/double-run jobs, status == SQLite store);
+# leaves experiments/ctl_smoke/{jobs.sqlite,status.json} as the artifact
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/ctl_smoke.py \
+    --workdir experiments/ctl_smoke

@@ -1,0 +1,200 @@
+#!/usr/bin/env python
+"""CI smoke for the repro.ctl control plane (ISSUE 7).
+
+End-to-end through the *real* artifacts — a daemon subprocess, the
+``repro-ctl`` CLI, and the SQLite store on disk:
+
+1. start the daemon (paced epochs so the kill lands mid-fleet),
+2. submit a 3-job trace + one held job via the CLI,
+3. cancel the held job, read status,
+4. SIGKILL the daemon while the fleet is mid-run,
+5. restart on the same store and wait for recovery to finish every job,
+6. assert: decision log is prefix-consistent across the kill, no job
+   lost or double-run, ``repro-ctl status`` agrees with the store,
+7. leave ``<workdir>/jobs.sqlite`` + ``<workdir>/status.json`` behind as
+   the CI artifact.
+
+Exit 0 on success, 1 with a diagnostic on any failed check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.ctl import CtlClient, CtlState, JobStore  # noqa: E402
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def _ctl(sock, *args, capture=False):
+    cmd = [sys.executable, "-m", "repro.ctl", "--socket", sock, *args]
+    res = subprocess.run(
+        cmd, env=_env(), capture_output=capture, text=True, timeout=120
+    )
+    if res.returncode != 0:
+        raise SystemExit(
+            f"CLI failed: {' '.join(args)}\n{res.stderr if capture else ''}"
+        )
+    return res.stdout if capture else None
+
+
+def _start_daemon(store, sock, epoch_sleep):
+    if os.path.exists(sock):
+        os.unlink(sock)
+    proc = subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.ctl", "--socket", sock, "start",
+            "--store", store, "--capacity-gb", "4.0",
+            "--epoch", "20", "--epoch-sleep", str(epoch_sleep),
+        ],
+        env=_env(),
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+    )
+    deadline = time.monotonic() + 60.0
+    while not os.path.exists(sock):
+        if proc.poll() is not None:
+            raise SystemExit(
+                f"daemon died at start:\n{proc.stdout.read().decode()}"
+            )
+        if time.monotonic() > deadline:
+            raise SystemExit("daemon socket never appeared")
+        time.sleep(0.05)
+    return proc
+
+
+def check(ok, msg):
+    print(("PASS" if ok else "FAIL"), msg)
+    if not ok:
+        raise SystemExit(1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workdir", default="experiments/ctl_smoke")
+    args = ap.parse_args()
+    shutil.rmtree(args.workdir, ignore_errors=True)
+    os.makedirs(args.workdir, exist_ok=True)
+    store_path = os.path.join(args.workdir, "jobs.sqlite")
+    sock = os.path.join(args.workdir, "ctl.sock")
+
+    proc = _start_daemon(store_path, sock, epoch_sleep=0.05)
+    try:
+        ids = []
+        for i in range(3):
+            # long enough (5000 virtual s at 20 s/epoch, 50 ms wall each)
+            # that the kill below is guaranteed to land mid-fleet even
+            # though each CLI round-trip costs an interpreter start
+            out = _ctl(
+                sock, "submit", "--name", f"smoke{i}", "--iters", "5000",
+                "--iter-time", "1.0", "--persistent-mb", "200",
+                "--ephemeral-mb", "800", capture=True,
+            )
+            ids.append(int(out.strip()))
+        held = int(_ctl(
+            sock, "submit", "--name", "held", "--iters", "50",
+            "--iter-time", "1.0", "--persistent-mb", "200",
+            "--ephemeral-mb", "800", "--hold", capture=True,
+        ).strip())
+        print(f"submitted jobs {ids} + held {held}")
+        _ctl(sock, "status")
+        _ctl(sock, "cancel", str(held))
+
+        reader = JobStore(store_path)
+        active = (CtlState.ADMITTED, CtlState.RUNNING, CtlState.PAGED,
+                  CtlState.MIGRATING)
+
+        def _mid_fleet():
+            return any(
+                r["state"] in active and 0 < r["iterations_done"] < r["n_iters"]
+                for r in reader.list_jobs()
+            )
+
+        deadline = time.monotonic() + 60.0
+        while not (_mid_fleet() and reader.decision_count() > 0):
+            if time.monotonic() > deadline:
+                raise SystemExit("fleet never committed a mid-run epoch")
+            time.sleep(0.01)
+        os.kill(proc.pid, signal.SIGKILL)
+        proc.wait(timeout=10)
+        print(f"SIGKILLed daemon pid {proc.pid} mid-fleet")
+        pre_log = reader.decision_log()
+        pre = {r["job_id"]: r["state"] for r in reader.list_jobs()}
+        check(
+            any(r["state"] in active for r in reader.list_jobs()),
+            "kill landed mid-fleet (an active job is stranded in the store)",
+        )
+    except BaseException:
+        if proc.poll() is None:
+            proc.kill()
+        raise
+
+    proc2 = _start_daemon(store_path, sock, epoch_sleep=0.0)
+    try:
+        CtlClient(sock).wait_quiet(timeout=180.0)
+        post_log = reader.decision_log()
+        check(
+            post_log[: len(pre_log)] == pre_log and len(post_log) > len(pre_log),
+            f"decision log prefix-consistent across kill "
+            f"({len(pre_log)} -> {len(post_log)} entries)",
+        )
+        reader.replay()
+        print("PASS transition history replays cleanly")
+        for jid in ids:
+            row = reader.get_job(jid)
+            check(
+                row["state"] is CtlState.FINISHED
+                and row["iterations_done"] == row["n_iters"],
+                f"job {jid} finished {row['iterations_done']}/{row['n_iters']}",
+            )
+            fins = [t for t in reader.transitions(jid) if t[2] == "finished"]
+            check(len(fins) == 1, f"job {jid} finished exactly once")
+        check(
+            reader.get_job(held)["state"] is CtlState.CANCELLED,
+            "held job stayed cancelled across the kill",
+        )
+        reasons = [t[4] for t in reader.transitions()]
+        check("crash-recovery requeue" in reasons, "recovery requeued the fleet")
+
+        status_json = _ctl(sock, "status", "--json", capture=True)
+        status = json.loads(status_json)
+        by_id = {j["job_id"]: j for j in status["jobs"]}
+        for row in reader.list_jobs():
+            check(
+                by_id[row["job_id"]]["state"] == row["state"].value
+                and by_id[row["job_id"]]["iterations_done"]
+                == row["iterations_done"],
+                f"status agrees with store for job {row['job_id']}",
+            )
+        out = os.path.join(args.workdir, "status.json")
+        with open(out, "w") as f:
+            f.write(status_json)
+        print(f"wrote {out}")
+        _ctl(sock, "shutdown")
+        proc2.wait(timeout=30)
+        reader.close()
+    finally:
+        if proc2.poll() is None:
+            proc2.kill()
+    print("ctl smoke: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,8 +14,24 @@ Public surface:
   * profiles / tracegen — workload tables + trace/request-stream generation
 """
 from repro.core.adaptor import VirtualDevice
-from repro.core.cluster import Cluster, ClusterExecutor, ClusterReport, ClusterResult
-from repro.core.engine import DecisionLog, Engine, ResultSurface, busy_seconds
+from repro.core.cluster import (
+    Cluster,
+    ClusterExecutor,
+    ClusterReport,
+    ClusterResult,
+    EpochControl,
+    EpochSnapshot,
+)
+from repro.core.engine import (
+    DecisionLog,
+    Engine,
+    ResultSurface,
+    busy_seconds,
+    decode_decision,
+    decode_decision_log,
+    encode_decision,
+    encode_decision_log,
+)
 from repro.core.executor import ExecutorReport, SalusExecutor
 from repro.core.placement import (
     DeviceView,
@@ -51,6 +67,13 @@ __all__ = [
     "ResultSurface",
     "DecisionLog",
     "busy_seconds",
+    "encode_decision",
+    "decode_decision",
+    "encode_decision_log",
+    "decode_decision_log",
+    # fleet epoch control plane
+    "EpochSnapshot",
+    "EpochControl",
     # engines + results
     "Simulator",
     "SimResult",

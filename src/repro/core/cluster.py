@@ -72,7 +72,89 @@ from repro.dist.fault import InjectedFailure, StragglerMonitor
 # retained alias (pre-Engine-API name; canonical home is repro.core.engine)
 _busy_seconds = busy_seconds
 
-_TERMINAL = (JobState.FINISHED, JobState.FAILED)
+_TERMINAL = (JobState.FINISHED, JobState.FAILED, JobState.CANCELLED)
+
+
+@dataclass
+class EpochSnapshot:
+    """Quiescent-boundary view of a fleet run, handed to the ``on_epoch``
+    callback after each rebalance pass. ``progress``/``states`` cover every
+    job still bound to a device (jobs evicted at an earlier boundary are
+    gone — their final stats were returned by the eviction). The logs are
+    the *full* fleet decision sequences so far; a durable consumer (the
+    :mod:`repro.ctl` store) keeps its own committed offsets and appends the
+    suffix."""
+
+    time: float  # scheduling-clock epoch boundary
+    progress: Dict[int, int]  # job_id -> iterations_done
+    states: Dict[int, "JobState"]
+    placement_log: List[tuple]  # plan.decision_log() so far
+    device_logs: List[List[tuple]]  # per-device memory decision logs so far
+    # in-engine rejections (P + E > C): engine-side state is FINISHED with
+    # stats.rejected set; consumers needing the distinction read this
+    rejected: frozenset = frozenset()
+
+
+class EpochControl:
+    """Control-plane handle valid only inside one ``on_epoch`` call, while
+    the fleet is quiescent (in-flight iterations drained — the same safe
+    point migrations use). ``evict`` pulls a job off the fleet keeping its
+    progress (a control-plane pause/requeue); ``cancel`` terminates it in
+    place (stats stay on its device with ``finish_time`` None, so cancelled
+    jobs never count as completed)."""
+
+    def __init__(self, sims, plan: PlacementPlan, t: float):
+        self._sims = sims
+        self._plan = plan
+        self._t = t
+
+    def _locate(self, job_id: int) -> int:
+        dev = self._plan.assignments.get(job_id)
+        if dev is not None and job_id in self._sims[dev]._jobs:
+            return dev
+        for i, sim in enumerate(self._sims):
+            if job_id in sim._jobs:  # rejected jobs routed to the sink
+                return i
+        raise KeyError(f"job {job_id} is not bound to any device")
+
+    def state(self, job_id: int) -> JobState:
+        return self._sims[self._locate(job_id)]._state[job_id]
+
+    def _log(self, kind: PlacementEventKind, job: JobSpec, src: int) -> None:
+        self._plan.events.append(
+            PlacementEvent(
+                kind, self._t, self._plan.order.get(job.job_id, -1),
+                job.name, None, src_device_id=src,
+            )
+        )
+
+    def evict(self, job_id: int) -> tuple:
+        """Pull a non-terminal job off the fleet, returning ``(spec,
+        stats)`` — its iterations_done is the boundary a later resubmission
+        resumes from (``Cluster.run(resume_done=...)``)."""
+        dev = self._locate(job_id)
+        sim = self._sims[dev]
+        job = sim._jobs[job_id]
+        if sim._state.get(job_id) in _TERMINAL:
+            raise RuntimeError(f"evict of terminal job {job.name}")
+        if sim.has_arrived(job_id):
+            st, _carry = sim.migrate_out(job)
+        else:
+            st = sim._stats[job_id]
+            sim.remove_pending(job)
+        self._plan.assignments.pop(job_id, None)
+        self._log(PlacementEventKind.EVICT, job, dev)
+        return job, st
+
+    def cancel(self, job_id: int) -> tuple:
+        """Terminally cancel a job in place (lane freed, stats kept on its
+        device). Returns ``(spec, stats)``."""
+        dev = self._locate(job_id)
+        sim = self._sims[dev]
+        job = sim._jobs[job_id]
+        st = sim.cancel(job)
+        self._log(PlacementEventKind.CANCEL, job, dev)
+        return job, st
 
 
 @dataclass
@@ -209,6 +291,7 @@ class Cluster(_RebalanceMixin):
         rebalancer: Optional[Rebalancer] = None,
         rebalance_interval: Optional[float] = None,
         fault_injector=None,
+        on_epoch=None,
     ):
         self.placer = Placer(
             n_devices, capacity, strategy, deficit_quantum=deficit_quantum
@@ -216,6 +299,9 @@ class Cluster(_RebalanceMixin):
         self.policy = get_policy(policy)
         self.switch_overhead = switch_overhead
         self.memory = memory
+        if on_epoch is not None and rebalance_interval is None:
+            raise ValueError("on_epoch needs rebalance_interval to ever fire")
+        self.on_epoch = on_epoch
         self._init_rebalance(rebalancer, rebalance_interval, fault_injector)
         self._submitted: List[JobSpec] = []
         self._plan: Optional[PlacementPlan] = None
@@ -228,6 +314,10 @@ class Cluster(_RebalanceMixin):
     # -- Engine protocol -----------------------------------------------
 
     def submit(self, job: JobSpec) -> None:
+        if any(j.job_id == job.job_id for j in self._submitted):
+            raise ValueError(
+                f"duplicate job_id {job.job_id} ({job.name!r}): already submitted"
+            )
         self._submitted.append(job)
 
     def result(self) -> Optional[ClusterResult]:
@@ -240,7 +330,11 @@ class Cluster(_RebalanceMixin):
         self,
         jobs: Optional[Sequence[JobSpec]] = None,
         until: Optional[float] = None,
+        resume_done: Optional[Dict[int, int]] = None,
     ) -> ClusterResult:
+        """``resume_done`` maps job_id -> iterations already committed in an
+        earlier life of the job (crash recovery / a control-plane requeue):
+        each listed job resumes from that boundary instead of iteration 0."""
         jobs = list(self._submitted if jobs is None else jobs)
         plan = self.placer.place(jobs)
         self._plan = plan
@@ -260,7 +354,7 @@ class Cluster(_RebalanceMixin):
             for i in range(self.n_devices)
         ]
         for sim, dev_jobs in zip(sims, plan.device_jobs(jobs, route_rejected_to=sink)):
-            sim.start(dev_jobs)
+            sim.start(dev_jobs, done=resume_done)
         applied: List[Migration] = []
         if self.rebalance_interval is None:
             for sim in sims:
@@ -284,6 +378,33 @@ class Cluster(_RebalanceMixin):
                 attempted = self._rebalance_sims(
                     sims, plan, horizon, jobs, jobs_by_id, applied
                 )
+                if self.on_epoch is not None:
+                    # quiescent boundary: hand the control plane a snapshot
+                    # plus an evict/cancel handle (the repro.ctl daemon
+                    # persists progress + decision-log suffixes here, which
+                    # is what makes a SIGKILL between epochs recoverable)
+                    snap = EpochSnapshot(
+                        time=horizon,
+                        progress={
+                            jid: st.iterations_done
+                            for sim in sims
+                            for jid, st in sim._stats.items()
+                        },
+                        states={
+                            jid: s
+                            for sim in sims
+                            for jid, s in sim._state.items()
+                        },
+                        placement_log=plan.decision_log(),
+                        device_logs=[sim.memory.decision_log() for sim in sims],
+                        rejected=frozenset(
+                            jid
+                            for sim in sims
+                            for jid, st in sim._stats.items()
+                            if st.rejected
+                        ),
+                    )
+                    self.on_epoch(snap, EpochControl(sims, plan, horizon))
                 # quiescence != completion: after a drain nothing is queued
                 # in the heaps, but READY jobs will re-schedule on the next
                 # advance — keep going while any epoch makes progress, any
@@ -557,6 +678,11 @@ class ClusterExecutor(_RebalanceMixin):
     # -- Engine protocol -----------------------------------------------
 
     def submit(self, session) -> None:
+        if any(s.job.job_id == session.job.job_id for s in self._sessions):
+            raise ValueError(
+                f"duplicate job_id {session.job.job_id} "
+                f"({session.job.name!r}): already submitted"
+            )
         self._sessions.append(session)
 
     def result(self) -> Optional[ClusterReport]:

@@ -27,7 +27,8 @@ breaks.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Protocol, Sequence, runtime_checkable
+import enum
+from typing import Any, Dict, List, Protocol, Sequence, runtime_checkable
 
 from repro.core.types import IterationRecord, JobStats, percentile
 
@@ -56,6 +57,29 @@ class DecisionLog(list):
 
     def __call__(self) -> List[tuple]:
         return list(self)
+
+
+def encode_decision(entry: Sequence[Any]) -> List[Any]:
+    """JSON-able form of one decision-log entry. Engine logs are tuples of
+    primitives (kind, ordinal, name, lane/device); enums are flattened to
+    their values so a persisted log is stable across enum identity. The
+    durable job store (:mod:`repro.ctl.store`) writes exactly this form."""
+    return [x.value if isinstance(x, enum.Enum) else x for x in entry]
+
+
+def decode_decision(obj: Sequence[Any]) -> tuple:
+    """Inverse of :func:`encode_decision` up to enum flattening: a JSON
+    round-trip turns tuples into lists, so recovery re-tuples them before
+    comparing against a live engine's ``decision_log()`` entries."""
+    return tuple(obj)
+
+
+def encode_decision_log(entries: Sequence[Sequence[Any]]) -> List[List[Any]]:
+    return [encode_decision(e) for e in entries]
+
+
+def decode_decision_log(objs: Sequence[Sequence[Any]]) -> List[tuple]:
+    return [decode_decision(o) for o in objs]
 
 
 def busy_seconds(records: Sequence[IterationRecord]) -> float:

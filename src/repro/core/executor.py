@@ -120,8 +120,15 @@ class SalusExecutor:
         return self.now() - (self._wall_base or 0.0)
 
     def submit(self, session: Session) -> None:
-        """(1a) create session + (1b) request a lane (may queue)."""
+        """(1a) create session + (1b) request a lane (may queue). Raises on
+        a duplicate ``job_id``: JobSpec equality/hashing key on the id, so a
+        second spec sharing one would silently replace the first in every
+        per-job dict (sessions, stats, registry assignment)."""
         job = session.job
+        if job.job_id in self.sessions:
+            raise ValueError(
+                f"duplicate job_id {job.job_id} ({job.name!r}): already submitted"
+            )
         self.sessions[job.job_id] = session
         self.stats[job.job_id] = JobStats(arrival_time=self.now())
         self.state[job.job_id] = JobState.QUEUED

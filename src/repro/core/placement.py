@@ -93,6 +93,8 @@ class PlacementEventKind(enum.Enum):
     MIGRATE = "migrate"  # live job moved src -> dst at an epoch boundary
     MIGRATE_FAILED = "migrate_failed"  # mid-migration failure; rolled back
     REPLACE = "replace"  # not-yet-arrived job re-bound at a boundary
+    EVICT = "evict"  # control plane pulled the job off the fleet (progress kept)
+    CANCEL = "cancel"  # control plane terminally cancelled the job in place
 
 
 @dataclass(frozen=True)

@@ -132,7 +132,14 @@ class Simulator:
     # ------------------------------------------------------------------
 
     def submit(self, job: JobSpec) -> None:
-        """Queue a job for the next ``run()`` / ``start()`` call."""
+        """Queue a job for the next ``run()`` / ``start()`` call. Raises on
+        a duplicate ``job_id``: JobSpec equality/hashing key on the id, so
+        two distinct specs sharing one would silently alias in every
+        per-job dict downstream (registry, stats, decision logs)."""
+        if any(j.job_id == job.job_id for j in self._submitted):
+            raise ValueError(
+                f"duplicate job_id {job.job_id} ({job.name!r}): already submitted"
+            )
         self._submitted.append(job)
 
     def run(self, jobs: Optional[List[JobSpec]] = None, until: Optional[float] = None) -> SimResult:
@@ -150,16 +157,22 @@ class Simulator:
     # Resumable driving surface (used by the cluster's rebalance epochs)
     # ------------------------------------------------------------------
 
-    def start(self, jobs: List[JobSpec]) -> None:
+    def start(
+        self, jobs: List[JobSpec], done: Optional[Dict[int, int]] = None
+    ) -> None:
         """Install the trace: per-job bookkeeping + arrival/request events.
-        Call once; drive with ``advance``/``drain_running`` afterwards."""
+        Call once; drive with ``advance``/``drain_running`` afterwards.
+        ``done`` maps job_id -> iterations already completed in an earlier
+        life of the job (crash recovery / a control-plane requeue): the job
+        resumes from that boundary instead of iteration 0."""
         if self._started:
             raise RuntimeError("Simulator.start() called twice; use a fresh instance")
         self._started = True
         self.memory.on_admit = self._on_admit
         self.memory.on_event = self._on_mem_event
+        done = done or {}
         for job in jobs:
-            self.add_pending(job)
+            self.add_pending(job, done=done.get(job.job_id, 0))
 
     @property
     def pending_events(self) -> bool:
@@ -223,7 +236,10 @@ class Simulator:
         for jid, st in self._stats.items():
             st.second_chances = max(st.second_chances, mm.chances.get(jid, 0))
         makespan = (
-            max((s.finish_time or self._now) for s in self._stats.values())
+            max(
+                (s.finish_time if s.finish_time is not None else self._now)
+                for s in self._stats.values()
+            )
             if self._stats
             else 0.0
         )
@@ -305,11 +321,25 @@ class Simulator:
         # then the ordinary admission path: admit / queue / reject
         return self.memory.migrate_in(job, self._now, self._busy())
 
-    def add_pending(self, job: JobSpec) -> None:
+    def add_pending(self, job: JobSpec, done: int = 0) -> None:
         """Bind a not-yet-arrived job to this device: bookkeeping + arrival
-        (and request) events. Used at start() and by placement amendments."""
+        (and request) events. Used at start() and by placement amendments.
+        ``done`` resumes the job at that iteration boundary (its first
+        ``done`` iterations ran in an earlier life — crash recovery)."""
+        if job.job_id in self._jobs:
+            raise ValueError(
+                f"duplicate job_id {job.job_id} ({job.name!r}): already bound here"
+            )
+        if not (0 <= done < job.n_iters):
+            # a job with all its iterations committed is finished, not
+            # resumable — the control plane must not requeue it
+            raise ValueError(
+                f"resume point {done} outside [0, {job.n_iters}) for {job.name!r}"
+            )
         self._jobs[job.job_id] = job
-        self._stats[job.job_id] = JobStats(arrival_time=job.arrival_time)
+        self._stats[job.job_id] = JobStats(
+            arrival_time=job.arrival_time, iterations_done=done
+        )
         self._state[job.job_id] = JobState.QUEUED
         gen = self._gen.get(job.job_id, 0)
         heapq.heappush(
@@ -319,8 +349,9 @@ class Simulator:
         if job.request_times:
             # open-loop services: each request arrival is an event that
             # wakes the scheduler (requests queue; they are not
-            # always-ready iterations)
-            for rt in job.request_times:
+            # always-ready iterations). Resumed jobs only need wake-ups
+            # for the requests they have not served yet.
+            for rt in job.request_times[done:]:
                 heapq.heappush(
                     self._events,
                     _Event(
@@ -341,6 +372,35 @@ class Simulator:
         self._stats.pop(jid, None)
         self._state.pop(jid, None)
         self._gen[jid] = self._gen.get(jid, 0) + 1
+
+    def cancel(self, job: JobSpec) -> JobStats:
+        """Terminally cancel a job at a quiescent boundary: free its device
+        resources (lane / queue slot — the deficit-ordered retry fires like
+        a finish) and mark it :attr:`JobState.CANCELLED`. Its stats stay in
+        this device's accounting with ``finish_time`` None, so cancelled
+        jobs never count as completed. RUNNING jobs cannot be cancelled —
+        iteration granularity holds for the control plane too (drain
+        first)."""
+        jid = job.job_id
+        state = self._state.get(jid)
+        if state is None:
+            raise RuntimeError(f"cancel of unknown job {job.name}")
+        if state in (JobState.FINISHED, JobState.FAILED, JobState.CANCELLED):
+            raise RuntimeError(f"cancel of terminal job {job.name} ({state.value})")
+        if state is JobState.RUNNING:
+            raise RuntimeError(
+                f"cancel of RUNNING job {job.name}: cancellation happens at "
+                "iteration boundaries only (drain first)"
+            )
+        if self.has_arrived(jid):
+            # frees the lane (or queue slot / paged set); queued jobs get
+            # their deficit-ordered admission retry, exactly like a finish
+            self.memory.job_finish(job, self._now, self._busy())
+        self._state[jid] = JobState.CANCELLED
+        self._gen[jid] = self._gen.get(jid, 0) + 1  # stale its queued events
+        if self._last_ran == jid:
+            self._last_ran = None
+        return self._stats[jid]
 
     # ------------------------------------------------------------------
     # Internals (the PR-4 run() loop, as instance state)

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import enum
 import itertools
+import math
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -19,15 +20,23 @@ GB = 1024 * MB
 
 
 def percentile(values: List[float], q: float) -> Optional[float]:
-    """Nearest-rank percentile (q in [0, 1]) of an unsorted sample; None on
-    an empty sample. Shared by JobStats and the serving benchmarks so both
-    report identical tail figures."""
+    """True nearest-rank percentile (q in [0, 1]) of an unsorted sample;
+    None on an empty sample. Shared by JobStats and the serving benchmarks
+    so both report identical tail figures.
+
+    Rank is ``ceil(q * n)`` (1-based; q = 0 means the minimum). The
+    previous ``int(round(q * (n - 1)))`` form went through Python's
+    banker's rounding, so exact-.5 ranks flipped direction with
+    sample-size parity (p50 of 4 samples picked the upper median while
+    p50 of 100 samples picked the lower one)."""
     if not values:
         return None
     if not (0.0 <= q <= 1.0):
         raise ValueError(f"q must be in [0, 1], got {q}")
     v = sorted(values)
-    return v[int(round(q * (len(v) - 1)))]
+    if q == 0.0:
+        return v[0]
+    return v[min(len(v) - 1, math.ceil(q * len(v)) - 1)]
 
 
 @dataclass(frozen=True)
@@ -136,6 +145,7 @@ class JobState(enum.Enum):
     PAGED = "paged"  # admitted, but persistent region paged out to host
     FINISHED = "finished"
     FAILED = "failed"  # step_fn raised; terminal, lane freed
+    CANCELLED = "cancelled"  # evicted by the control plane; terminal, lane freed
 
 
 class MemoryEventKind(enum.Enum):

@@ -1,0 +1,47 @@
+"""repro.ctl: the persistent control plane.
+
+A long-lived scheduler daemon (:class:`CtlDaemon`) owning a
+:class:`~repro.core.cluster.Cluster` engine behind a durable SQLite
+:class:`JobStore`, with a validated job-lifecycle state machine
+(:mod:`repro.ctl.state_machine`) and the ``repro-ctl`` CLI
+(:mod:`repro.ctl.cli`) speaking newline-delimited JSON over a unix
+socket. Epoch-boundary commits make a SIGKILL at any instant lose at
+most the current epoch's uncommitted tail; :meth:`CtlDaemon.recover`
+replays the persisted history and requeues interrupted jobs from their
+last committed iteration.
+"""
+from repro.ctl.daemon import CtlClient, CtlDaemon, CtlError
+from repro.ctl.state_machine import (
+    TRANSITIONS,
+    CtlState,
+    InvalidTransition,
+    can_transition,
+    ctl_state_of,
+    is_terminal,
+    validate_transition,
+)
+from repro.ctl.store import (
+    DuplicateJob,
+    JobStore,
+    StoreCorruption,
+    spec_from_dict,
+    spec_to_dict,
+)
+
+__all__ = [
+    "CtlDaemon",
+    "CtlClient",
+    "CtlError",
+    "CtlState",
+    "TRANSITIONS",
+    "InvalidTransition",
+    "can_transition",
+    "ctl_state_of",
+    "is_terminal",
+    "validate_transition",
+    "JobStore",
+    "DuplicateJob",
+    "StoreCorruption",
+    "spec_to_dict",
+    "spec_from_dict",
+]

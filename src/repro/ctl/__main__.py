@@ -1,0 +1,7 @@
+"""``python -m repro.ctl`` — entry point for the repro-ctl CLI."""
+import sys
+
+from repro.ctl.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,223 @@
+"""Regression tests for the ISSUE 7 satellite bugfixes:
+
+* ``percentile`` true nearest-rank (the old ``int(round(q*(n-1)))`` form
+  hit Python's banker's rounding at exact-.5 ranks, so p50 flipped
+  direction with sample-size parity),
+* duplicate ``job_id`` submits raise in every Engine backend instead of
+  silently aliasing two jobs in id-keyed maps,
+* zero-completed result surfaces stay defined (0.0 / empty, never a
+  ZeroDivisionError or None-propagation) across all engines.
+"""
+import time
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    GB,
+    MB,
+    Cluster,
+    ClusterExecutor,
+    JobSpec,
+    MemoryProfile,
+    SalusExecutor,
+    Simulator,
+    get_policy,
+    percentile,
+)
+from repro.core.session import Session
+
+CAP = int(4 * GB)
+PROF = MemoryProfile(200 * MB, 800 * MB)
+
+
+def _job(name="j", n_iters=3, **kw):
+    kw.setdefault("profile", PROF)
+    kw.setdefault("iter_time", 1.0)
+    return JobSpec(name=name, n_iters=n_iters, **kw)
+
+
+def _session(name="s", n_iters=2):
+    def step(state, batch):
+        time.sleep(0.001)
+        return state
+
+    return Session(
+        name, step, jnp.zeros((4,), jnp.float32), lambda i: None, n_iters,
+        profile=PROF, iter_time=0.001,
+    )
+
+
+# ---------------------------------------------------------------------------
+# percentile: true nearest-rank
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_small_n_p50():
+    # nearest-rank p50 is the lower median: ceil(0.5 * 4) = rank 2
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.50) == 2.0
+    # the old banker's-rounding form picked the *upper* median here
+    # (int(round(1.5)) == 2 -> index 2 -> value 3.0)
+    assert percentile([1.0, 2.0, 3.0, 4.0, 5.0], 0.50) == 3.0
+    assert percentile([7.0], 0.50) == 7.0
+    assert percentile([1.0, 2.0], 0.50) == 1.0
+
+
+def test_percentile_small_n_tails():
+    v = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(v, 0.95) == 4.0  # ceil(3.8) = rank 4
+    assert percentile(v, 0.99) == 4.0
+    assert percentile(v, 0.75) == 3.0  # ceil(3.0) = rank 3, not round(2.25)
+    assert percentile([5.0, 1.0, 3.0], 0.99) == 5.0  # unsorted input
+
+
+def test_percentile_parity_consistency():
+    """p50 must pick the same (lower) median regardless of n's parity —
+    the banker's-rounding bug made n=4 and n=100 disagree in direction."""
+    assert percentile(list(map(float, range(1, 5))), 0.50) == 2.0
+    assert percentile(list(map(float, range(1, 101))), 0.50) == 50.0
+    assert percentile(list(map(float, range(1, 7))), 0.50) == 3.0
+
+
+def test_percentile_bounds_and_errors():
+    v = [3.0, 1.0, 2.0]
+    assert percentile(v, 0.0) == 1.0
+    assert percentile(v, 1.0) == 3.0
+    assert percentile([], 0.5) is None
+    with pytest.raises(ValueError):
+        percentile(v, 1.5)
+    with pytest.raises(ValueError):
+        percentile(v, -0.1)
+
+
+def test_percentile_p95_thirty_samples_unchanged():
+    # sanity: the fix must not move well-behaved ranks (ceil(28.5) = 29,
+    # same element the old formula chose)
+    v = list(map(float, range(1, 31)))
+    assert percentile(v, 0.95) == 29.0
+
+
+# ---------------------------------------------------------------------------
+# duplicate job_id: every backend refuses
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_job_id_simulator():
+    sim = Simulator(CAP, get_policy("fifo"))
+    a, b = _job("a"), _job("b")
+    b.job_id = a.job_id
+    sim.submit(a)
+    with pytest.raises(ValueError, match="duplicate job_id"):
+        sim.submit(b)
+
+
+def test_duplicate_job_id_cluster():
+    cl = Cluster(2, CAP, "fifo")
+    a, b = _job("a"), _job("b")
+    b.job_id = a.job_id
+    cl.submit(a)
+    with pytest.raises(ValueError, match="duplicate job_id"):
+        cl.submit(b)
+
+
+def test_duplicate_job_id_executor():
+    ex = SalusExecutor(CAP, get_policy("fifo"), accounting="nominal")
+    s1, s2 = _session("a"), _session("b")
+    s2.job.job_id = s1.job.job_id
+    ex.submit(s1)
+    with pytest.raises(ValueError, match="duplicate job_id"):
+        ex.submit(s2)
+
+
+def test_duplicate_job_id_cluster_executor():
+    cx = ClusterExecutor(2, CAP, "fifo", accounting="nominal")
+    s1, s2 = _session("a"), _session("b")
+    s2.job.job_id = s1.job.job_id
+    cx.submit(s1)
+    with pytest.raises(ValueError, match="duplicate job_id"):
+        cx.submit(s2)
+
+
+def test_resubmitting_same_spec_twice_also_raises():
+    sim = Simulator(CAP, get_policy("fifo"))
+    job = _job("twice")
+    sim.submit(job)
+    with pytest.raises(ValueError, match="duplicate job_id"):
+        sim.submit(job)
+
+
+# ---------------------------------------------------------------------------
+# empty / zero-completed result surfaces
+# ---------------------------------------------------------------------------
+
+
+def _check_empty_surface(res):
+    assert res.completed == 0
+    assert res.jcts == []
+    assert res.avg_jct == 0.0
+    assert res.p95_jct == 0.0
+    assert res.utilization == 0.0
+    assert res.request_latencies == []
+    assert res.per_job == {} or all(
+        s.finish_time is None for s in res.per_job.values()
+    )
+
+
+def test_empty_simulator_surfaces():
+    res = Simulator(CAP, get_policy("fifo")).run([])
+    _check_empty_surface(res)
+    assert res.makespan == 0.0
+    assert res.summary()["n_jobs"] == 0
+
+
+def test_empty_executor_surfaces():
+    rep = SalusExecutor(CAP, get_policy("fifo"), accounting="nominal").run()
+    _check_empty_surface(rep)
+
+
+def test_empty_cluster_surfaces():
+    res = Cluster(2, CAP, "fifo").run([])
+    _check_empty_surface(res)
+    assert res.devices_used == 0
+    assert res.per_device_utilization == [0.0, 0.0]
+    summary = res.summary()
+    assert summary["completed"] == 0 and summary["n_jobs"] == 0
+
+
+def test_empty_cluster_executor_surfaces():
+    rep = ClusterExecutor(2, CAP, "fifo", accounting="nominal").run()
+    _check_empty_surface(rep)
+
+
+def test_all_rejected_cluster_surfaces():
+    """Jobs that can never fit: completed stays 0 and every aggregate is
+    defined (the rejected job transits admission and is FAILED in-engine)."""
+    huge = _job("huge", profile=MemoryProfile(int(8 * GB), int(8 * GB)))
+    res = Cluster(1, CAP, "fifo").run([huge])
+    assert res.completed == 0
+    assert res.avg_jct == 0.0 and res.p95_jct == 0.0
+    assert res.summary()["rejected"] == 1
+    assert res.stats[huge.job_id].rejected
+
+
+def test_all_cancelled_cluster_surfaces():
+    """Everything cancelled at the first epoch boundary (the control
+    plane's kill switch): zero completed, defined aggregates, CANCEL
+    placement events logged."""
+
+    def kill_all(snap, control):
+        for jid, state in snap.states.items():
+            if state.value not in ("finished", "failed", "cancelled"):
+                control.cancel(jid)
+
+    cl = Cluster(
+        1, CAP, "fifo", rebalance_interval=5.0, on_epoch=kill_all
+    )
+    res = cl.run([_job(f"c{i}", n_iters=50) for i in range(3)])
+    assert res.completed == 0
+    assert res.jcts == [] and res.avg_jct == 0.0 and res.p95_jct == 0.0
+    kinds = [e[0] for e in res.placement_log()]
+    assert kinds.count("cancel") == 3
+    # cancelled jobs keep their partial progress but never a finish_time
+    for st in res.stats.values():
+        assert st.finish_time is None

@@ -1,0 +1,225 @@
+"""Control-plane daemon tests (ISSUE 7 tentpole): fleet runs over the
+durable store, epoch-boundary command application, the unix-socket JSON
+protocol, and status/store agreement."""
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core.types import GB, MB
+from repro.ctl import CtlClient, CtlDaemon, CtlError, CtlState, JobStore
+
+
+def _spec(name="j", n_iters=20, **kw):
+    d = {
+        "name": name,
+        "n_iters": n_iters,
+        "iter_time": 1.0,
+        "persistent": 200 * MB,
+        "ephemeral": 800 * MB,
+    }
+    d.update(kw)
+    return d
+
+
+def _submit(daemon, name="j", n_iters=20, hold=False, **kw):
+    resp = daemon.handle_request(
+        {"cmd": "submit", "spec": _spec(name, n_iters, **kw), "hold": hold}
+    )
+    assert resp["ok"], resp
+    return resp["job_id"]
+
+
+@pytest.fixture
+def daemon(tmp_path):
+    d = CtlDaemon(
+        str(tmp_path / "jobs.sqlite"),
+        epoch=10.0,
+        n_devices=2,
+        capacity=4 * GB,
+        policy="fifo",
+    )
+    yield d
+    d.store.close()
+
+
+def test_submit_run_finish(daemon):
+    ids = [_submit(daemon, f"job{i}", 20 + 5 * i) for i in range(3)]
+    assert daemon.run_pending_fleets() == 1
+    for jid in ids:
+        row = daemon.store.get_job(jid)
+        assert row["state"] is CtlState.FINISHED
+        assert row["iterations_done"] == row["n_iters"]
+    # the store holds the full fleet decision history
+    assert daemon.store.decision_count() > 0
+    assert "placement" in daemon.store.decision_sources()
+    # history replays cleanly (corruption check passes on a live store)
+    daemon.store.replay()
+
+
+def test_status_agrees_with_store(daemon):
+    ids = [_submit(daemon, f"job{i}") for i in range(2)]
+    daemon.run_pending_fleets()
+    status = daemon.handle_request({"cmd": "status"})
+    assert status["ok"]
+    by_id = {j["job_id"]: j for j in status["jobs"]}
+    for row in daemon.store.list_jobs():
+        j = by_id[row["job_id"]]
+        assert j["state"] == row["state"].value
+        assert j["iterations_done"] == row["iterations_done"]
+    assert status["counts"] == daemon.store.counts()
+    one = daemon.handle_request({"cmd": "status", "job_id": ids[0]})
+    assert [t["dst"] for t in one["job"]["transitions"]] == [
+        "submitted", "admitted", "running", "finished",
+    ]
+
+
+def test_run_with_empty_store_is_a_noop(daemon):
+    assert daemon.run_pending_fleets() == 0
+
+
+def test_duplicate_job_id_refused_at_daemon(daemon):
+    spec = _spec("dup")
+    spec["job_id"] = 7
+    r1 = daemon.handle_request({"cmd": "submit", "spec": spec})
+    assert r1["ok"]
+    r2 = daemon.handle_request({"cmd": "submit", "spec": spec})
+    assert not r2["ok"] and "duplicate" in r2["error"]
+
+
+def test_hold_then_resume(daemon):
+    jid = _submit(daemon, "held", hold=True)
+    assert daemon.run_pending_fleets() == 0  # PAUSED jobs are not claimed
+    assert daemon.store.get_job(jid)["state"] is CtlState.PAUSED
+    resp = daemon.handle_request({"cmd": "resume", "job_id": jid})
+    assert resp["ok"]
+    daemon.run_pending_fleets()
+    assert daemon.store.get_job(jid)["state"] is CtlState.FINISHED
+
+
+def test_cancel_idle_job_is_immediate(daemon):
+    jid = _submit(daemon, "victim")
+    resp = daemon.handle_request({"cmd": "cancel", "job_id": jid})
+    assert resp["ok"] and resp["pending"] is False
+    assert daemon.store.get_job(jid)["state"] is CtlState.CANCELLED
+    # a cancelled job is never claimed
+    assert daemon.run_pending_fleets() == 0
+    # cancel of a terminal job is an error, not a silent no-op
+    resp = daemon.handle_request({"cmd": "cancel", "job_id": jid})
+    assert not resp["ok"]
+
+
+def test_all_jobs_cancelled_leaves_defined_empty_surfaces(daemon):
+    """The empty-result satellite end-to-end: cancel everything via the
+    control plane, run, and every aggregate stays defined."""
+    for i in range(3):
+        jid = _submit(daemon, f"c{i}")
+        daemon.handle_request({"cmd": "cancel", "job_id": jid})
+    assert daemon.run_pending_fleets() == 0
+    counts = daemon.store.counts()
+    assert counts == {"cancelled": 3}
+    status = daemon.handle_request({"cmd": "status"})
+    assert status["ok"] and status["decisions"] == 0
+
+
+def test_unknown_command_and_bad_specs(daemon):
+    assert not daemon.handle_request({"cmd": "frobnicate"})["ok"]
+    assert not daemon.handle_request({"cmd": "submit", "spec": {"name": "x"}})["ok"]
+    assert not daemon.handle_request({"cmd": "cancel", "job_id": 999})["ok"]
+    assert not daemon.handle_request({"cmd": "resume", "job_id": 999})["ok"]
+
+
+def test_recover_finishes_job_whose_last_commit_was_complete(tmp_path):
+    """ADMITTED job with all iterations committed (crash after the progress
+    write but before the FINISHED write) finishes at recovery, not re-runs."""
+    store = JobStore(str(tmp_path / "jobs.sqlite"))
+    spec = _spec("done", n_iters=4)
+    spec["job_id"] = store.next_job_id()
+    jid = store.add_job(spec)
+    store.set_state(jid, CtlState.ADMITTED)
+    store.update_progress(jid, 4)
+    d = CtlDaemon(store, epoch=10.0)
+    assert d.recover() == []
+    assert store.get_job(jid)["state"] is CtlState.FINISHED
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# Socket protocol
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def served(tmp_path):
+    sock = str(tmp_path / "ctl.sock")
+    daemon = CtlDaemon(
+        str(tmp_path / "jobs.sqlite"),
+        socket_path=sock,
+        epoch=5.0,
+        epoch_sleep=0.02,  # pace epochs so commands land mid-fleet
+        n_devices=1,
+        capacity=4 * GB,
+        policy="fifo",
+    )
+    thread = threading.Thread(target=daemon.serve, daemon=True)
+    thread.start()
+    deadline = time.monotonic() + 10.0
+    while not os.path.exists(sock):
+        assert time.monotonic() < deadline, "daemon socket never appeared"
+        time.sleep(0.02)
+    yield CtlClient(sock), daemon
+    daemon.stop()
+    thread.join(timeout=10.0)
+    daemon.store.close()
+
+
+def test_socket_submit_status_cancel(served):
+    client, daemon = served
+    ping = client.request("ping")
+    assert ping["pid"] == os.getpid()
+    long = client.request("submit", spec=_spec("long", n_iters=500))["job_id"]
+    short = client.request("submit", spec=_spec("short", n_iters=30))["job_id"]
+    time.sleep(0.2)  # let the fleet pick them up
+    resp = client.request("cancel", job_id=long)
+    assert resp["ok"]  # pending (boundary) or immediate, depending on timing
+    status = client.wait_quiet(timeout=30.0)
+    by_id = {j["job_id"]: j for j in status["jobs"]}
+    assert by_id[long]["state"] == "cancelled"
+    assert by_id[short]["state"] == "finished"
+    assert by_id[short]["iterations_done"] == 30
+    # socket status agrees with the store underneath
+    for row in daemon.store.list_jobs():
+        assert by_id[row["job_id"]]["state"] == row["state"].value
+
+
+def test_socket_pause_keeps_progress_and_resumes(served):
+    client, daemon = served
+    jid = client.request("submit", spec=_spec("pauseme", n_iters=400))["job_id"]
+    time.sleep(0.3)
+    client.request("pause", job_id=jid)
+    deadline = time.monotonic() + 15.0
+    while True:
+        row = client.request("status", job_id=jid)["job"]
+        if row["state"] == "paused":
+            break
+        assert time.monotonic() < deadline, f"never paused: {row}"
+        time.sleep(0.05)
+    paused_at = row["iterations_done"]
+    assert 0 < paused_at < 400
+    client.request("resume", job_id=jid)
+    client.wait_quiet(timeout=60.0)
+    row = client.request("status", job_id=jid)["job"]
+    assert row["state"] == "finished" and row["iterations_done"] == 400
+    dsts = [t["dst"] for t in row["transitions"]]
+    assert dsts.count("paused") == 1 and dsts.count("finished") == 1
+
+
+def test_socket_drain_refuses_submissions(served):
+    client, daemon = served
+    jid = client.request("submit", spec=_spec("last", n_iters=20))["job_id"]
+    resp = client.request("drain", wait=True, timeout=30.0)
+    assert resp["draining"] and resp["quiet"]
+    with pytest.raises(CtlError):
+        client.request("submit", spec=_spec("toolate"))
+    assert daemon.store.get_job(jid)["state"] is CtlState.FINISHED

@@ -1,0 +1,193 @@
+"""Durable JobStore tests (ISSUE 7): SQLite persistence of specs,
+validated lifecycle transitions, monotone progress, decision-log append,
+durable id allocation, and full-history replay as the corruption check."""
+import json
+import sqlite3
+
+import pytest
+
+from repro.core.types import MB, JobSpec, MemoryProfile
+from repro.ctl.state_machine import CtlState, InvalidTransition
+from repro.ctl.store import (
+    DuplicateJob,
+    JobStore,
+    StoreCorruption,
+    spec_from_dict,
+    spec_to_dict,
+)
+
+
+def _spec_dict(store, name="j", n_iters=10, **kw):
+    d = {
+        "job_id": store.next_job_id(),
+        "name": name,
+        "persistent": 200 * MB,
+        "ephemeral": 800 * MB,
+        "n_iters": n_iters,
+        "iter_time": 1.0,
+    }
+    d.update(kw)
+    return d
+
+
+@pytest.fixture
+def store(tmp_path):
+    s = JobStore(str(tmp_path / "jobs.sqlite"))
+    yield s
+    s.close()
+
+
+def test_spec_roundtrip_preserves_fields_and_id():
+    job = JobSpec(
+        name="svc",
+        profile=MemoryProfile(300 * MB, 900 * MB),
+        n_iters=3,
+        iter_time=0.25,
+        utilization=0.5,
+        arrival_time=7.0,
+        kind="inference",
+        priority=2,
+        request_times=(0.0, 1.0, 2.0),
+        meta={"model": "res50"},
+    )
+    back = spec_from_dict(json.loads(json.dumps(spec_to_dict(job))))
+    assert back.job_id == job.job_id
+    assert back.profile == job.profile
+    assert back.request_times == job.request_times
+    assert back.priority == 2 and back.kind == "inference"
+    assert back.meta == {"model": "res50"}
+
+
+def test_unserializable_meta_is_dropped_not_fatal():
+    job = JobSpec(
+        name="j", profile=MemoryProfile(MB, MB), n_iters=1, iter_time=1.0,
+        meta={"fn": object()},
+    )
+    assert spec_to_dict(job)["meta"] == {}
+
+
+def test_add_job_records_creation_transition(store):
+    jid = store.add_job(_spec_dict(store))
+    row = store.get_job(jid)
+    assert row["state"] is CtlState.SUBMITTED
+    assert row["iterations_done"] == 0
+    assert store.transitions(jid) == [(jid, None, "submitted", pytest.approx(row["submitted_at"]), "submit")]
+
+
+def test_duplicate_job_id_raises(store):
+    d = _spec_dict(store)
+    store.add_job(d)
+    with pytest.raises(DuplicateJob):
+        store.add_job(d)
+
+
+def test_set_state_validates_and_records_history(store):
+    jid = store.add_job(_spec_dict(store))
+    store.set_state(jid, CtlState.ADMITTED, reason="claim")
+    store.set_state(jid, CtlState.RUNNING)
+    with pytest.raises(InvalidTransition):
+        store.set_state(jid, CtlState.ADMITTED)  # no backward hop
+    store.set_state(jid, CtlState.FINISHED)
+    with pytest.raises(InvalidTransition):
+        store.set_state(jid, CtlState.SUBMITTED)  # terminal absorbs
+    assert [t[2] for t in store.transitions(jid)] == [
+        "submitted", "admitted", "running", "finished",
+    ]
+    # same-state writes are no-ops, not history spam
+    store.set_state(jid, CtlState.FINISHED)
+    assert len(store.transitions(jid)) == 4
+
+
+def test_set_state_unknown_job(store):
+    with pytest.raises(KeyError):
+        store.set_state(999, CtlState.ADMITTED)
+
+
+def test_progress_is_monotone(store):
+    jid = store.add_job(_spec_dict(store, n_iters=50))
+    store.update_progress(jid, 10)
+    store.update_progress(jid, 10)  # idempotent
+    store.update_progress(jid, 30)
+    with pytest.raises(StoreCorruption):
+        store.update_progress(jid, 20)
+    assert store.get_job(jid)["iterations_done"] == 30
+
+
+def test_decision_log_append_and_roundtrip(store):
+    entries = [("admit", 0, "a", 0), ("queue", 1, "b", None)]
+    assert store.append_decisions("device:0", entries) == 2
+    store.append_decisions("placement", [("place", 0, "a", 0)])
+    assert store.decision_log("device:0") == entries
+    assert store.decision_count() == 3
+    assert store.decision_sources() == ["device:0", "placement"]
+
+
+def test_next_job_id_is_durable(tmp_path):
+    path = str(tmp_path / "jobs.sqlite")
+    s1 = JobStore(path)
+    ids = [s1.next_job_id() for _ in range(3)]
+    s1.close()
+    s2 = JobStore(path)
+    assert s2.next_job_id() == ids[-1] + 1  # survives reopen: no reuse
+    s2.close()
+
+
+def test_replay_accepts_clean_history(store):
+    a = store.add_job(_spec_dict(store, name="a"))
+    b = store.add_job(_spec_dict(store, name="b"))
+    store.set_state(a, CtlState.ADMITTED)
+    store.set_state(a, CtlState.RUNNING)
+    store.set_state(a, CtlState.FINISHED)
+    store.set_state(b, CtlState.CANCELLED)
+    assert store.replay() == {a: CtlState.FINISHED, b: CtlState.CANCELLED}
+
+
+def test_replay_detects_tampered_state(store, tmp_path):
+    jid = store.add_job(_spec_dict(store))
+    store.set_state(jid, CtlState.ADMITTED)
+    # hand-edit the jobs table behind the state machine's back
+    conn = sqlite3.connect(store.path)
+    conn.execute("UPDATE jobs SET state = 'finished' WHERE job_id = ?", (jid,))
+    conn.commit()
+    conn.close()
+    with pytest.raises(StoreCorruption):
+        store.replay()
+
+
+def test_replay_detects_illegal_hop_in_history(store):
+    jid = store.add_job(_spec_dict(store))
+    conn = sqlite3.connect(store.path)
+    # forge an illegal SUBMITTED -> RUNNING hop plus a matching jobs row
+    conn.execute(
+        "INSERT INTO transitions (job_id, src, dst, at, reason)"
+        " VALUES (?, 'submitted', 'running', 0.0, 'forged')",
+        (jid,),
+    )
+    conn.execute("UPDATE jobs SET state = 'running' WHERE job_id = ?", (jid,))
+    conn.commit()
+    conn.close()
+    with pytest.raises(StoreCorruption):
+        store.replay()
+
+
+def test_replay_detects_progress_overrun(store):
+    jid = store.add_job(_spec_dict(store, n_iters=5))
+    conn = sqlite3.connect(store.path)
+    conn.execute("UPDATE jobs SET iterations_done = 9 WHERE job_id = ?", (jid,))
+    conn.commit()
+    conn.close()
+    with pytest.raises(StoreCorruption):
+        store.replay()
+
+
+def test_transaction_rolls_back_atomically(store):
+    jid = store.add_job(_spec_dict(store))
+    try:
+        with store.transaction():
+            store.set_state(jid, CtlState.ADMITTED)
+            store.append_decisions("placement", [("place", 0, "j", 0)])
+            raise RuntimeError("boom")
+    except RuntimeError:
+        pass
+    assert store.get_job(jid)["state"] is CtlState.SUBMITTED
+    assert store.decision_count() == 0

@@ -81,8 +81,8 @@ def test_request_pending_gate():
 def test_percentile_nearest_rank():
     vals = [float(i) for i in range(1, 101)]
     assert percentile(vals, 0.0) == 1.0
-    assert percentile(vals, 0.50) == 51.0  # nearest-rank on 100 samples
-    assert percentile(vals, 0.95) == 95.0  # index round(0.95 * 99) = 94
+    assert percentile(vals, 0.50) == 50.0  # true nearest rank: ceil(0.5*100) = 50th
+    assert percentile(vals, 0.95) == 95.0  # ceil(0.95 * 100) = 95th value
     assert percentile(vals, 1.0) == 100.0
     assert percentile([], 0.5) is None
     with pytest.raises(ValueError):
