@@ -1,0 +1,82 @@
+"""Static-analysis gate cost: what repro-lint adds to every CI run.
+
+The lint must stay cheap enough to gate tier-1 unconditionally, so this
+bench times the exact command CI runs and *fails* if a full-tree pass
+exceeds the 5 s budget (``tests/test_analysis.py`` asserts the same
+bound — this keeps the number visible in the benchmark CSV/artifact
+trail as the tree grows).
+
+1. ``analysis/full_tree``  — ``run_analysis(["src"], repo config)``:
+   parse + index + all four checker families over every shipped module.
+2. ``analysis/decision_core`` — just the seven `repro.core` decision
+   modules, the hot set touched by nearly every PR.
+
+``--json`` writes the summary dict (CI artifact); ``--fast`` drops the
+repeat count to 1.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+from benchmarks.common import base_parser, emit, write_json
+
+REPO = Path(__file__).resolve().parent.parent
+BUDGET_S = 5.0
+
+
+def _time_pass(paths, cfg, reps: int) -> tuple:
+    from repro.analysis import run_analysis
+
+    files = findings = 0
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        report = run_analysis(paths, cfg)
+        files = report.files_checked
+        findings = len(report.all_findings())
+    us = (time.perf_counter() - t0) / reps * 1e6
+    return us, files, findings
+
+
+def run(argv=None) -> dict:
+    ap = argparse.ArgumentParser(
+        description=__doc__, parents=[base_parser()],
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    args = ap.parse_args(argv)
+    reps = 1 if args.fast else 3
+
+    from repro.analysis import load_config
+
+    cfg = load_config(REPO / "analysis.toml")
+
+    full_us, n_files, n_findings = _time_pass([REPO / "src"], cfg, reps)
+    emit("analysis/full_tree", full_us, f"files={n_files};findings={n_findings}")
+
+    core = sorted((REPO / "src" / "repro" / "core").glob("*.py"))
+    core_us, n_core, _ = _time_pass(core, cfg, reps)
+    emit("analysis/decision_core", core_us, f"files={n_core}")
+
+    full_s = full_us / 1e6
+    if full_s >= BUDGET_S:
+        raise RuntimeError(
+            f"repro-lint full-tree pass took {full_s:.2f}s, budget is "
+            f"{BUDGET_S:.0f}s: the gate is no longer cheap enough to run "
+            "on every PR"
+        )
+
+    results = {
+        "full_tree_us": full_us,
+        "full_tree_files": n_files,
+        "decision_core_us": core_us,
+        "decision_core_files": n_core,
+        "budget_s": BUDGET_S,
+        "within_budget": True,
+    }
+    write_json(args.json, results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

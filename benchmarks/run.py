@@ -13,6 +13,7 @@
   fig4/9       bench_switching    transfer-vs-latency + live switch latency
   fig1/5       bench_memory       persistent/ephemeral taxonomy (live)
   roofline     roofline_report    §Roofline terms from the dry-run artifacts
+  lint         bench_analysis     repro-lint full-tree cost vs its 5 s budget
 """
 from __future__ import annotations
 
@@ -36,6 +37,7 @@ def main() -> None:
         "benchmarks.bench_switching",
         "benchmarks.bench_overhead",
         "benchmarks.roofline_report",
+        "benchmarks.bench_analysis",
     ]
     failed = []
     for mod_name in modules:

@@ -17,6 +17,16 @@ echo "== import-smoke: pytest --collect-only =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest --collect-only -q >/dev/null
 echo "ok"
 
+echo "== static-analysis: repro-lint (determinism/parity/lifecycle/discipline) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis src
+
+if command -v mypy >/dev/null 2>&1; then
+    echo "== static-analysis: mypy --strict (src/repro/core + src/repro/ctl) =="
+    mypy
+else
+    echo "== static-analysis: mypy not installed locally, skipped (CI runs it) =="
+fi
+
 if [[ "${1:-}" == "--fast" ]]; then
     exit 0
 fi
@@ -43,6 +53,10 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serve \
 echo "== benchmark smoke: live migration (defrag/rebalance/drain regime) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_migration \
     --fast --json experiments/bench_migration_smoke.json
+
+echo "== benchmark smoke: repro-lint gate cost vs its 5s budget =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_analysis \
+    --fast --json experiments/bench_analysis_smoke.json
 
 echo "== benchmark smoke: control-plane durable epoch commits =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_ctl \

@@ -1,0 +1,45 @@
+"""repro-lint: static analysis for the repo's determinism and lifecycle
+contracts (``python -m repro.analysis``).
+
+The repo's core guarantee — bitwise-identical decision logs between the
+simulator and the live executor, plus a crash-consistent control plane —
+is enforced at runtime by the differential and chaos suites. This package
+proves the cheap-to-check halves of those contracts *statically*, so a
+violation is a red CI job at review time instead of a flaky differential
+test after merge.
+
+Rule families (full catalog in ROADMAP "Shipped subsystems"):
+
+``RPL00x`` determinism lint (decision-path modules only)
+    RPL001 wall-clock read, RPL002 unseeded RNG, RPL003 builtin
+    ``hash()``, RPL004 order-sensitive iteration over a ``set``.
+``RPL01x`` enum/state exhaustiveness
+    RPL010 non-exhaustive enum dispatch, RPL011 ctl lifecycle-table
+    consistency (coverage, terminal absorption, requeue edges,
+    reachability, ``ctl_state_of`` projection).
+``RPL02x`` engine parity
+    RPL020 event-kind emission parity between engine pairs
+    (Simulator↔SalusExecutor, Cluster↔ClusterExecutor), RPL021 Engine
+    protocol surface completeness.
+``RPL03x`` store/lock discipline (``ctl/daemon.py``)
+    RPL030 JobStore writes outside a crash-atomic transaction,
+    RPL031 shared-state mutation outside the server lock.
+
+Intentional exceptions are suppressed in ``analysis.toml`` — every
+suppression must carry a non-empty ``reason`` string.
+"""
+
+from repro.analysis.base import Finding, Module, RULES
+from repro.analysis.config import AnalysisConfig, ConfigError, load_config
+from repro.analysis.runner import Report, run_analysis
+
+__all__ = [
+    "AnalysisConfig",
+    "ConfigError",
+    "Finding",
+    "Module",
+    "Report",
+    "RULES",
+    "load_config",
+    "run_analysis",
+]

@@ -1,0 +1,97 @@
+"""CLI driver: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 clean, 1 findings, 2 config/usage error. With no
+``--config``, an ``analysis.toml`` in the current directory (the repo
+root in CI) is used; otherwise builtin defaults, which mirror the
+shipped config minus its suppressions.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis.base import RULES
+from repro.analysis.config import ConfigError, load_config
+from repro.analysis.runner import run_analysis
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: determinism / lifecycle / engine-parity static analysis",
+    )
+    parser.add_argument(
+        "paths",
+        nargs="*",
+        default=None,
+        help="files or directories to scan (default: src/)",
+    )
+    parser.add_argument(
+        "--config",
+        type=Path,
+        default=None,
+        help="analysis.toml to use (default: ./analysis.toml if present)",
+    )
+    parser.add_argument(
+        "--json",
+        action="store_true",
+        help="emit the full report as JSON on stdout",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog and exit"
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+
+    config_path = args.config
+    if config_path is None:
+        default = Path("analysis.toml")
+        config_path = default if default.is_file() else None
+    try:
+        cfg = load_config(config_path)
+    except ConfigError as e:
+        print(f"repro.analysis: config error: {e}", file=sys.stderr)
+        return 2
+
+    paths = [Path(p) for p in (args.paths or ["src"])]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(
+            f"repro.analysis: no such path: {', '.join(map(str, missing))}",
+            file=sys.stderr,
+        )
+        return 2
+
+    report = run_analysis(paths, cfg)
+
+    if args.json:
+        json.dump(report.to_dict(), sys.stdout, indent=2)
+        print()
+    else:
+        for f in report.all_findings():
+            print(f"{f.location()}: {f.rule} {f.message}")
+        for s in report.unused_suppressions:
+            print(
+                f"warning: unused suppression {s.rule} path={s.path!r}"
+                + (f" symbol={s.symbol!r}" if s.symbol else ""),
+                file=sys.stderr,
+            )
+        n = len(report.all_findings())
+        print(
+            f"repro.analysis: {report.files_checked} files, "
+            f"{n} finding{'s' if n != 1 else ''}, "
+            f"{len(report.suppressed)} suppressed, "
+            f"{report.elapsed_s:.2f}s"
+        )
+    return 0 if report.clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

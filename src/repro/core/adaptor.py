@@ -11,7 +11,7 @@ only component that touches jit/compile, keeping user code unchanged.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 
@@ -22,9 +22,9 @@ from repro.core.types import MemoryProfile
 
 
 class VirtualDevice:
-    def __init__(self, executor: SalusExecutor):
+    def __init__(self, executor: SalusExecutor) -> None:
         self.executor = executor
-        self._sessions = []
+        self._sessions: List[Session] = []
 
     def create_session(
         self,

@@ -43,7 +43,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.engine import DecisionLog, ResultSurface, busy_seconds
 from repro.core.executor import ExecutorReport, SalusExecutor
@@ -103,7 +103,7 @@ class EpochControl:
     place (stats stay on its device with ``finish_time`` None, so cancelled
     jobs never count as completed)."""
 
-    def __init__(self, sims, plan: PlacementPlan, t: float):
+    def __init__(self, sims: List[Simulator], plan: PlacementPlan, t: float) -> None:
         self._sims = sims
         self._plan = plan
         self._t = t
@@ -249,7 +249,7 @@ class _RebalanceMixin:
         self,
         rebalancer: Optional[Rebalancer],
         rebalance_interval: Optional[float],
-        fault_injector,
+        fault_injector: Optional[Any],
     ) -> None:
         if rebalance_interval is not None and rebalance_interval <= 0:
             raise ValueError(
@@ -290,9 +290,9 @@ class Cluster(_RebalanceMixin):
         deficit_quantum: Optional[int] = None,
         rebalancer: Optional[Rebalancer] = None,
         rebalance_interval: Optional[float] = None,
-        fault_injector=None,
-        on_epoch=None,
-    ):
+        fault_injector: Optional[Any] = None,
+        on_epoch: Optional[Callable[..., Any]] = None,
+    ) -> None:
         self.placer = Placer(
             n_devices, capacity, strategy, deficit_quantum=deficit_quantum
         )
@@ -426,7 +426,12 @@ class Cluster(_RebalanceMixin):
 
     # -- rebalance epoch internals ---------------------------------------
 
-    def _telemetry(self, dev_id: int, records, jobs_by_id):
+    def _telemetry(
+        self,
+        dev_id: int,
+        records: Sequence[IterationRecord],
+        jobs_by_id: Dict[int, JobSpec],
+    ) -> Tuple[float, float]:
         """Measured/declared dilation + strongest straggler flag since the
         last boundary — the JobStats/StragglerMonitor feedback the drift
         pass runs on. Durations are normalized by the job's declared
@@ -447,7 +452,15 @@ class Cluster(_RebalanceMixin):
         sigma = max((f.sigma for f in mon.flagged[n_flagged:]), default=0.0)
         return (measured / declared if declared > 0 else 1.0), sigma
 
-    def _rebalance_sims(self, sims, plan, t, jobs, jobs_by_id, applied) -> int:
+    def _rebalance_sims(
+        self,
+        sims: List[Simulator],
+        plan: PlacementPlan,
+        t: float,
+        jobs: Sequence[JobSpec],
+        jobs_by_id: Dict[int, JobSpec],
+        applied: List[Migration],
+    ) -> int:
         views = []
         for dev_id, sim in enumerate(sims):
             jvs = []
@@ -483,7 +496,9 @@ class Cluster(_RebalanceMixin):
         self._replace_pending(sims, plan, t, jobs)
         return attempted
 
-    def _apply_sim(self, m: Migration, sims, plan, t: float) -> bool:
+    def _apply_sim(
+        self, m: Migration, sims: List[Simulator], plan: PlacementPlan, t: float
+    ) -> bool:
         src, dst = sims[m.src], sims[m.dst]
         job = src._jobs[m.job_id]
         st, carry = src.migrate_out(job)
@@ -503,7 +518,13 @@ class Cluster(_RebalanceMixin):
         self._log_migration(plan, PlacementEventKind.MIGRATE, t, m, m.dst)
         return True
 
-    def _replace_pending(self, sims, plan, t: float, jobs) -> None:
+    def _replace_pending(
+        self,
+        sims: List[Simulator],
+        plan: PlacementPlan,
+        t: float,
+        jobs: Sequence[JobSpec],
+    ) -> None:
         """Re-bind jobs that have not *arrived* yet against the
         post-migration fleet, per the placer's strategy over live
         registries. Placement is a-priori; without this amendment a device
@@ -530,14 +551,14 @@ class Cluster(_RebalanceMixin):
                 )
             )
 
-    def _choose_pending(self, sims, job: JobSpec) -> Optional[int]:
+    def _choose_pending(self, sims: List[Simulator], job: JobSpec) -> Optional[int]:
         drain = self.rebalancer.drain if self.rebalancer is not None else frozenset()
 
-        def free(sim):
+        def free(sim: Simulator) -> int:
             reg = sim.registry
             return reg.capacity - reg.persistent_used - reg.lane_total
 
-        def load(i):
+        def load(i: int) -> float:
             sim = sims[i]
             total = 0.0
             for jid, state in sim._state.items():
@@ -654,8 +675,8 @@ class ClusterExecutor(_RebalanceMixin):
         deficit_quantum: Optional[int] = None,
         rebalancer: Optional[Rebalancer] = None,
         rebalance_interval: Optional[float] = None,
-        fault_injector=None,
-    ):
+        fault_injector: Optional[Any] = None,
+    ) -> None:
         self.placer = Placer(
             n_devices, capacity, strategy, deficit_quantum=deficit_quantum
         )
@@ -677,7 +698,7 @@ class ClusterExecutor(_RebalanceMixin):
 
     # -- Engine protocol -----------------------------------------------
 
-    def submit(self, session) -> None:
+    def submit(self, session: Any) -> None:
         if any(s.job.job_id == session.job.job_id for s in self._sessions):
             raise ValueError(
                 f"duplicate job_id {session.job.job_id} "
@@ -736,7 +757,9 @@ class ClusterExecutor(_RebalanceMixin):
 
     # -- rebalance epoch internals ---------------------------------------
 
-    def _rebalance_executors(self, plan, t: float, applied) -> int:
+    def _rebalance_executors(
+        self, plan: PlacementPlan, t: float, applied: List[Migration]
+    ) -> int:
         views = []
         for dev_id, ex in enumerate(self.executors):
             jvs = []

@@ -41,11 +41,11 @@ class Engine(Protocol):
     protocol only pins the method names; the *result* shape is unified via
     :class:`ResultSurface` instead."""
 
-    def submit(self, work) -> None: ...
+    def submit(self, work: Any) -> None: ...
 
-    def run(self, *args, **kwargs): ...
+    def run(self, *args: Any, **kwargs: Any) -> Any: ...
 
-    def result(self): ...
+    def result(self) -> Any: ...
 
     def decision_log(self) -> List[tuple]: ...
 

@@ -74,7 +74,7 @@ class SalusExecutor:
         policy: Policy,
         memory: Optional[MemoryConfig] = None,
         accounting: str = "wall",
-    ):
+    ) -> None:
         if accounting not in ("wall", "nominal"):
             raise ValueError(f"accounting must be wall|nominal, got {accounting!r}")
         self.registry = LaneRegistry(capacity)
@@ -203,6 +203,15 @@ class SalusExecutor:
             self._vtransfer[ev.job_id] = (
                 self._vtransfer.get(ev.job_id, 0.0) + self._modeled_cost(ev.job)
             )
+        else:
+            # explicit default (RPL010): ADMIT / QUEUE / LANE_MOVED carry no
+            # stats or state change here — mirrors the simulator branch for
+            # branch-for-branch parity (RPL020)
+            assert ev.kind in (
+                MemoryEventKind.ADMIT,
+                MemoryEventKind.QUEUE,
+                MemoryEventKind.LANE_MOVED,
+            ), ev.kind
 
     # ------------------------------------------------------------------
 

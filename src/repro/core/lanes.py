@@ -35,7 +35,7 @@ class Lane:
     def fits(self, ephemeral: int) -> bool:
         return self.size >= ephemeral
 
-    def __repr__(self):
+    def __repr__(self) -> str:
         return f"Lane#{self.lane_id}(size={self.size}, base={self.base}, ref={self.ref})"
 
 
@@ -47,7 +47,7 @@ class LaneRegistry:
     """Algorithm 1, event-driven. Callbacks let the executor/simulator react
     to admissions and lane moves."""
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int) -> None:
         self.capacity = int(capacity)
         self.lanes: Dict[int, Lane] = {}
         self.persistent_used = 0

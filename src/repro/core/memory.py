@@ -85,7 +85,7 @@ class MemoryManager:
         registry: LaneRegistry,
         config: Optional[MemoryConfig] = None,
         pager: Optional[Pager] = None,
-    ):
+    ) -> None:
         self.registry = registry
         self.config = config or MemoryConfig()
         self._pager = pager
@@ -225,7 +225,9 @@ class MemoryManager:
         # 1. accrue deficit for every job currently denied service
         for j in reg.queue:
             self.deficit[j.job_id] = self.deficit.get(j.job_id, 0) + self._quantum(j)
-        for jid in reg.paged:
+        # accrual is commutative, but iterate in sorted id order anyway so
+        # no scheduling choice can ever grow out of set order here (RPL004)
+        for jid in sorted(reg.paged):
             spec = self.specs[jid]
             self.deficit[jid] = self.deficit.get(jid, 0) + self._quantum(spec)
         # 2. page paged-out jobs back in, highest deficit first

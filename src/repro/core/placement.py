@@ -170,7 +170,7 @@ class _DeviceModel:
     """Shadow admission/load model of one device — no simulation, just the
     byte-exact lane safety condition plus a work-conserving queue model."""
 
-    def __init__(self, device_id: int, capacity: int):
+    def __init__(self, device_id: int, capacity: int) -> None:
         self.device_id = device_id
         self.capacity = int(capacity)
         self.registry = LaneRegistry(self.capacity)
@@ -221,7 +221,7 @@ class Placer:
         capacity: Union[int, Sequence[int]],
         strategy: Union[str, PlacementStrategy] = PlacementStrategy.LEAST_LOADED,
         deficit_quantum: Optional[int] = None,
-    ):
+    ) -> None:
         if n_devices < 1:
             raise ValueError(f"n_devices must be >= 1, got {n_devices}")
         if isinstance(capacity, (int, float)):
@@ -398,7 +398,7 @@ class _Shadow:
     """A cloned registry plus the byte-exact admission check, the only
     state the rebalancer mutates while reasoning."""
 
-    def __init__(self, view: DeviceView, registry: Optional[LaneRegistry] = None):
+    def __init__(self, view: DeviceView, registry: Optional[LaneRegistry] = None) -> None:
         self.device_id = view.device_id
         self._view = view
         self.registry = registry if registry is not None else view.registry.clone()
@@ -469,7 +469,7 @@ class Rebalancer:
         min_remaining_iters: int = 2,
         max_migrations_per_job: int = 3,
         use_telemetry: bool = False,
-    ):
+    ) -> None:
         if mode not in ("consolidate", "rebalance", "none"):
             raise ValueError(
                 f"mode must be consolidate|rebalance|none, got {mode!r}"
@@ -533,7 +533,14 @@ class Rebalancer:
         total = sum(jv.remaining_work for jv in live)
         return total * self._est_dilation(shadow._view, live)
 
-    def _drain_pass(self, views, shadows, jv_by_id, migs, moved) -> None:
+    def _drain_pass(
+        self,
+        views: List[DeviceView],
+        shadows: Dict[int, _Shadow],
+        jv_by_id: Dict[int, JobView],
+        migs: List[Migration],
+        moved: set,
+    ) -> None:
         if not self.drain:
             return
         dst_ids = [v.device_id for v in views if v.device_id not in self.drain]
@@ -561,7 +568,14 @@ class Rebalancer:
                         )
                         break
 
-    def _consolidate(self, views, shadows, jv_by_id, migs, moved) -> None:
+    def _consolidate(
+        self,
+        views: List[DeviceView],
+        shadows: Dict[int, _Shadow],
+        jv_by_id: Dict[int, JobView],
+        migs: List[Migration],
+        moved: set,
+    ) -> None:
         while True:
             occupied = [
                 s
@@ -613,7 +627,14 @@ class Rebalancer:
             if not committed:
                 return
 
-    def _rebalance(self, views, shadows, jv_by_id, migs, moved) -> None:
+    def _rebalance(
+        self,
+        views: List[DeviceView],
+        shadows: Dict[int, _Shadow],
+        jv_by_id: Dict[int, JobView],
+        migs: List[Migration],
+        moved: set,
+    ) -> None:
         views_by_id = {v.device_id: v for v in views}
         pool = [s for s in shadows.values() if s.device_id not in self.drain]
         if len(pool) < 2:

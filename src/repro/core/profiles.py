@@ -18,7 +18,7 @@ Two sources:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 from repro.core.types import GB, MB, JobSpec, MemoryProfile
 
@@ -124,7 +124,7 @@ def inference_profile(name: str) -> Tuple[MemoryProfile, float]:
 # ---------------------------------------------------------------------------
 
 
-def profile_executable(compiled) -> MemoryProfile:
+def profile_executable(compiled: Any) -> MemoryProfile:
     """Salus memory taxonomy from an XLA executable:
     persistent <- argument buffers (params/optimizer state live across
     iterations) + generated code (framework-internal);
@@ -136,7 +136,7 @@ def profile_executable(compiled) -> MemoryProfile:
     return MemoryProfile(persistent=persistent, ephemeral=max(ephemeral, 1))
 
 
-def profile_model(model, params, batch, opt=None) -> MemoryProfile:
+def profile_model(model: Any, params: Any, batch: Any, opt: Any = None) -> MemoryProfile:
     """Compile one step of ``model`` and measure its Salus profile."""
     import jax
 

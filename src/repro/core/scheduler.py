@@ -13,7 +13,7 @@ Two execution regimes (paper §5.1):
 """
 from __future__ import annotations
 
-from typing import Dict, FrozenSet, List, Optional
+from typing import Dict, FrozenSet, List, Optional, Union
 
 from repro.core.types import JobSpec, JobStats
 
@@ -44,7 +44,7 @@ class Policy:
             return candidates
         return [j for j in candidates if j.job_id not in blocked]
 
-    def __repr__(self):
+    def __repr__(self) -> str:
         return f"<{type(self).__name__}>"
 
 
@@ -55,7 +55,13 @@ class FIFO(Policy):
     name = "fifo"
     exclusive = True
 
-    def select(self, candidates, stats, now, blocked=_NONE_BLOCKED):
+    def select(
+        self,
+        candidates: List[JobSpec],
+        stats: Dict[int, JobStats],
+        now: float,
+        blocked: FrozenSet[int] = _NONE_BLOCKED,
+    ) -> Optional[JobSpec]:
         candidates = self.eligible(candidates, blocked)
         if not candidates:
             return None
@@ -72,7 +78,13 @@ class SRTF(Policy):
     name = "srtf"
     exclusive = True
 
-    def select(self, candidates, stats, now, blocked=_NONE_BLOCKED):
+    def select(
+        self,
+        candidates: List[JobSpec],
+        stats: Dict[int, JobStats],
+        now: float,
+        blocked: FrozenSet[int] = _NONE_BLOCKED,
+    ) -> Optional[JobSpec]:
         candidates = self.eligible(candidates, blocked)
         if not candidates:
             return None
@@ -91,7 +103,13 @@ class PACK(Policy):
     name = "pack"
     exclusive = False
 
-    def select(self, candidates, stats, now, blocked=_NONE_BLOCKED):
+    def select(
+        self,
+        candidates: List[JobSpec],
+        stats: Dict[int, JobStats],
+        now: float,
+        blocked: FrozenSet[int] = _NONE_BLOCKED,
+    ) -> Optional[JobSpec]:
         candidates = self.eligible(candidates, blocked)
         if not candidates:
             return None
@@ -109,7 +127,13 @@ class FAIR(Policy):
     name = "fair"
     exclusive = False
 
-    def select(self, candidates, stats, now, blocked=_NONE_BLOCKED):
+    def select(
+        self,
+        candidates: List[JobSpec],
+        stats: Dict[int, JobStats],
+        now: float,
+        blocked: FrozenSet[int] = _NONE_BLOCKED,
+    ) -> Optional[JobSpec]:
         candidates = self.eligible(candidates, blocked)
         if not candidates:
             return None
@@ -144,12 +168,18 @@ class PRIORITY(Policy):
     name = "priority"
     exclusive = True
 
-    def __init__(self, aging: Optional[float] = None):
+    def __init__(self, aging: Optional[float] = None) -> None:
         if aging is not None and aging <= 0:
             raise ValueError(f"aging must be positive seconds, got {aging}")
         self.aging = aging
 
-    def select(self, candidates, stats, now, blocked=_NONE_BLOCKED):
+    def select(
+        self,
+        candidates: List[JobSpec],
+        stats: Dict[int, JobStats],
+        now: float,
+        blocked: FrozenSet[int] = _NONE_BLOCKED,
+    ) -> Optional[JobSpec]:
         candidates = self.eligible(candidates, blocked)
         if not candidates:
             return None
@@ -178,7 +208,7 @@ class PRIORITY(Policy):
 POLICIES = {p.name: p for p in (FIFO(), SRTF(), PACK(), FAIR(), PRIORITY())}
 
 
-def get_policy(name) -> Policy:
+def get_policy(name: Union[str, Policy]) -> Policy:
     """Resolve a policy from a case-insensitive name or pass an already-
     constructed :class:`Policy` through unchanged — the one blessed entry
     point, mirrored by ``placement.get_strategy``."""

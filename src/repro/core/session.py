@@ -33,7 +33,7 @@ class Session:
         kind: str = "train",
         priority: Optional[int] = None,
         request_times: Optional[tuple] = None,  # open-loop request stream
-    ):
+    ) -> None:
         self.name = name
         self.step_fn = step_fn
         self.state = init_state

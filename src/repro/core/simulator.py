@@ -31,7 +31,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.engine import DecisionLog, ResultSurface
 from repro.core.lanes import Lane, LaneRegistry
@@ -71,7 +71,7 @@ class SimResult(ResultSurface):
     # jcts / avg_jct / p95_jct / utilization / completed / per_job /
     # request_latencies come from ResultSurface.
 
-    def _collect(self, fn):
+    def _collect(self, fn: Callable[[JobStats], Optional[float]]) -> List[float]:
         vals = [fn(s) for s in self.stats.values()]
         return [v for v in vals if v is not None]
 
@@ -104,7 +104,7 @@ class Simulator:
         policy: Policy,
         switch_overhead: float = 0.0,
         memory: Optional[MemoryConfig] = None,
-    ):
+    ) -> None:
         self.registry = LaneRegistry(capacity)
         self.memory = MemoryManager(self.registry, memory)
         self.policy = get_policy(policy)
@@ -556,6 +556,15 @@ class Simulator:
             self._transfer_delay[ev.job_id] = (
                 self._transfer_delay.get(ev.job_id, 0.0) + ev.cost
             )
+        else:
+            # explicit default (RPL010): ADMIT / QUEUE / LANE_MOVED carry no
+            # stats or state change here — admission state is applied by the
+            # on_admit callback, queueing leaves the job QUEUED as-is
+            assert ev.kind in (
+                MemoryEventKind.ADMIT,
+                MemoryEventKind.QUEUE,
+                MemoryEventKind.LANE_MOVED,
+            ), ev.kind
 
     def _handle(self, ev: _Event) -> bool:
         """Process one event. Returns False for *stale* events — wake-ups

@@ -84,7 +84,7 @@ class JobSpec:
 
     _ids = itertools.count()
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         self.job_id = next(JobSpec._ids)
         if not (0.0 < self.utilization <= 1.0):
             raise ValueError(f"utilization must be in (0, 1], got {self.utilization}")
@@ -130,10 +130,12 @@ class JobSpec:
     def total_work(self) -> float:
         return self.n_iters * self.iter_time
 
-    def __hash__(self):
-        return hash(self.job_id)
+    def __hash__(self) -> int:
+        # the id itself, not builtin hash(): anything feeding ordering or
+        # seeding must be stable across processes (PYTHONHASHSEED) — RPL003
+        return self.job_id
 
-    def __eq__(self, other):
+    def __eq__(self, other: object) -> bool:
         return isinstance(other, JobSpec) and other.job_id == self.job_id
 
 

@@ -93,9 +93,9 @@ class CtlDaemon:
         epoch: float = 60.0,
         rebalance_mode: str = "none",
         epoch_sleep: float = 0.0,
-        fault_injector=None,
+        fault_injector: Optional[Any] = None,
         poll_interval: float = 0.05,
-    ):
+    ) -> None:
         self.store = store if isinstance(store, JobStore) else JobStore(store)
         self.socket_path = socket_path
         self.n_devices = n_devices
@@ -136,27 +136,32 @@ class CtlDaemon:
         job a dead fleet run owned. Returns the requeued job_ids."""
         self.store.replay()
         requeued: List[int] = []
-        for row in self.store.list_jobs():
-            st: CtlState = row["state"]
-            if st not in (
-                CtlState.ADMITTED,
-                CtlState.RUNNING,
-                CtlState.PAGED,
-                CtlState.MIGRATING,
-            ):
-                continue  # terminal, PAUSED and SUBMITTED survive as-is
-            jid = row["job_id"]
-            if row["iterations_done"] >= row["n_iters"]:
-                # the final iteration was committed but the FINISHED write
-                # was lost with the crash — finish, don't re-run
-                self.store.set_state(
-                    jid, CtlState.FINISHED, reason="recovery: all iterations committed"
-                )
-            else:
-                self.store.set_state(
-                    jid, CtlState.SUBMITTED, reason="crash-recovery requeue"
-                )
-                requeued.append(jid)
+        # one transaction: recovery is all-or-nothing, so a crash *during*
+        # recovery can never leave half the dead fleet requeued (RPL030)
+        with self.store.transaction():
+            for row in self.store.list_jobs():
+                st: CtlState = row["state"]
+                if st not in (
+                    CtlState.ADMITTED,
+                    CtlState.RUNNING,
+                    CtlState.PAGED,
+                    CtlState.MIGRATING,
+                ):
+                    continue  # terminal, PAUSED and SUBMITTED survive as-is
+                jid = row["job_id"]
+                if row["iterations_done"] >= row["n_iters"]:
+                    # the final iteration was committed but the FINISHED write
+                    # was lost with the crash — finish, don't re-run
+                    self.store.set_state(
+                        jid,
+                        CtlState.FINISHED,
+                        reason="recovery: all iterations committed",
+                    )
+                else:
+                    self.store.set_state(
+                        jid, CtlState.SUBMITTED, reason="crash-recovery requeue"
+                    )
+                    requeued.append(jid)
         return requeued
 
     # ------------------------------------------------------------------
@@ -182,20 +187,26 @@ class CtlDaemon:
     def _claim_batch(self) -> List[Tuple[JobSpec, int]]:
         with self._ctl_lock:
             batch: List[Tuple[JobSpec, int]] = []
-            for row in self.store.list_jobs(states=[CtlState.SUBMITTED]):
-                try:
-                    self.store.set_state(
-                        row["job_id"], CtlState.ADMITTED, reason="claimed by fleet run"
-                    )
-                except InvalidTransition:
-                    continue  # cancelled between list and claim
-                spec = spec_from_dict(row["spec"])
-                done = int(row["iterations_done"])
-                if done > 0:
-                    # a requeued job already "arrived" in an earlier life;
-                    # its original arrival offset must not delay the resume
-                    spec.arrival_time = 0.0
-                batch.append((spec, done))
+            # claim the whole batch in one transaction: a crash mid-claim
+            # must not strand a prefix in ADMITTED with no fleet to run it
+            # (recover() would fix it, but only after a restart) — RPL030
+            with self.store.transaction():
+                for row in self.store.list_jobs(states=[CtlState.SUBMITTED]):
+                    try:
+                        self.store.set_state(
+                            row["job_id"],
+                            CtlState.ADMITTED,
+                            reason="claimed by fleet run",
+                        )
+                    except InvalidTransition:
+                        continue  # cancelled between list and claim
+                    spec = spec_from_dict(row["spec"])
+                    done = int(row["iterations_done"])
+                    if done > 0:
+                        # a requeued job already "arrived" in an earlier life;
+                        # its original arrival offset must not delay the resume
+                        spec.arrival_time = 0.0
+                    batch.append((spec, done))
             self._active = {spec.job_id for spec, _ in batch}
             self._terminal_committed = set()
         return batch
@@ -239,13 +250,15 @@ class CtlDaemon:
 
     def _requeue_active(self, reason: str) -> None:
         with self._ctl_lock:
-            for jid in sorted(self._active):
-                row = self.store.get_job(jid)
-                if row is not None and row["state"] in _ACTIVE_STATES:
-                    try:
-                        self.store.set_state(jid, CtlState.SUBMITTED, reason=reason)
-                    except InvalidTransition:
-                        pass
+            # all-or-nothing requeue of the aborted fleet's jobs (RPL030)
+            with self.store.transaction():
+                for jid in sorted(self._active):
+                    row = self.store.get_job(jid)
+                    if row is not None and row["state"] in _ACTIVE_STATES:
+                        try:
+                            self.store.set_state(jid, CtlState.SUBMITTED, reason=reason)
+                        except InvalidTransition:
+                            pass
             self._active = set()
 
     # ------------------------------------------------------------------
@@ -289,6 +302,12 @@ class CtlDaemon:
         # migrated this epoch get a MIGRATING hop in their lifecycle
         migrated_names = {e[2] for e in delta_placement if e[0] == "migrate"}
         now = time.time()
+        # jobs that reach a terminal state in THIS commit. Collected locally
+        # and merged into self._terminal_committed only after the transaction
+        # commits: a rollback must not leave the in-memory set claiming a
+        # terminal write the store never saw (RPL031 keeps the merge under
+        # the server lock, where handler threads read it)
+        newly_terminal: Set[int] = set()
         with self.store.transaction():
             self.store.append_decisions("placement", delta_placement)
             for i, delta in enumerate(delta_devices):
@@ -317,13 +336,13 @@ class CtlDaemon:
                 )
                 self.store.set_state(jid, target, reason=reason, now=now)
                 if is_terminal(target):
-                    self._terminal_committed.add(jid)
+                    newly_terminal.add(jid)
             for jid, st in cancelled:
                 self.store.update_progress(jid, st.iterations_done, now=now)
                 self.store.set_state(
                     jid, CtlState.CANCELLED, reason="cancel at epoch boundary", now=now
                 )
-                self._terminal_committed.add(jid)
+                newly_terminal.add(jid)
             for jid, st in paused:
                 self.store.update_progress(jid, st.iterations_done, now=now)
                 self.store.set_state(
@@ -334,6 +353,7 @@ class CtlDaemon:
         self._off_placement = len(snap.placement_log)
         self._off_devices = [len(log) for log in snap.device_logs]
         with self._ctl_lock:
+            self._terminal_committed |= newly_terminal
             self._active -= self._terminal_committed
             self._active -= {jid for jid, _ in paused}
         if self.epoch_sleep > 0:
@@ -355,6 +375,7 @@ class CtlDaemon:
         ]
         stats = res.stats
         now = time.time()
+        newly_terminal: Set[int] = set()  # merged under the lock post-commit
         with self.store.transaction():
             self.store.append_decisions("placement", delta_placement)
             for i, delta in enumerate(delta_devices):
@@ -393,9 +414,11 @@ class CtlDaemon:
                         now=now,
                     )
                     continue
-                self._terminal_committed.add(jid)
+                newly_terminal.add(jid)
         self._off_placement = len(placement_log)
         self._off_devices = [len(log) for log in device_logs]
+        with self._ctl_lock:
+            self._terminal_committed |= newly_terminal
 
     # ------------------------------------------------------------------
     # Command surface (shared by the socket server and direct callers)
@@ -431,9 +454,12 @@ class CtlDaemon:
         if "job_id" not in spec or spec["job_id"] is None:
             spec["job_id"] = self.store.next_job_id()
         spec_from_dict(spec)  # validate before persisting
-        job_id = self.store.add_job(spec)
-        if req.get("hold"):
-            self.store.set_state(job_id, CtlState.PAUSED, reason="submitted --hold")
+        # add + optional hold in one transaction: a failed hold must not
+        # leave the job behind in SUBMITTED, schedulable (RPL030)
+        with self.store.transaction():
+            job_id = self.store.add_job(spec)
+            if req.get("hold"):
+                self.store.set_state(job_id, CtlState.PAUSED, reason="submitted --hold")
         self._wake.set()
         return {"ok": True, "job_id": job_id}
 
@@ -573,7 +599,7 @@ class CtlDaemon:
         daemon = self
 
         class Handler(socketserver.StreamRequestHandler):
-            def handle(self):
+            def handle(self) -> None:
                 for line in self.rfile:
                     line = line.strip()
                     if not line:
@@ -611,7 +637,7 @@ class CtlDaemon:
 class CtlClient:
     """Tiny blocking client for the daemon's unix-socket JSON protocol."""
 
-    def __init__(self, socket_path: str, timeout: float = 30.0):
+    def __init__(self, socket_path: str, timeout: float = 30.0) -> None:
         self.socket_path = socket_path
         self.timeout = timeout
 

@@ -45,7 +45,7 @@ import sqlite3
 import threading
 import time
 from contextlib import contextmanager
-from typing import Any, Dict, Iterable, List, Optional, Tuple
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
 
 from repro.core.engine import decode_decision, encode_decision
 from repro.core.types import JobSpec, MemoryProfile
@@ -145,7 +145,7 @@ def spec_from_dict(d: Dict[str, Any]) -> JobSpec:
 class JobStore:
     """Crash-safe job + decision-log store (SQLite, WAL)."""
 
-    def __init__(self, path: str, timeout: float = 30.0):
+    def __init__(self, path: str, timeout: float = 30.0) -> None:
         self.path = path
         self._lock = threading.RLock()
         # isolation_level=None -> autocommit; explicit transactions via
@@ -167,7 +167,7 @@ class JobStore:
     # -- transactions ----------------------------------------------------
 
     @contextmanager
-    def transaction(self):
+    def transaction(self) -> Iterator["JobStore"]:
         """One atomic unit; nests (inner blocks join the outer one)."""
         with self._lock:
             if self._conn.in_transaction:

@@ -1,0 +1,8 @@
+"""BAD: scheduling decision derived from the wall clock."""
+import time
+
+
+def pick_next(queue):
+    # tie-break by how long the host has been up: differs every run
+    deadline = time.time() + 5.0
+    return [j for j in queue if j.arrival < deadline]

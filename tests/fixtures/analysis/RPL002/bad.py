@@ -1,0 +1,16 @@
+"""BAD: hidden-global and seedless RNGs on a decision path."""
+import random
+
+import numpy as np
+
+
+def jitter():
+    return random.random()  # module-global RNG
+
+
+def noise():
+    return np.random.normal()  # legacy numpy global state
+
+
+def make_rng():
+    return np.random.default_rng()  # seedless: OS entropy

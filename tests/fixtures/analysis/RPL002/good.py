@@ -1,0 +1,13 @@
+"""GOOD: explicitly seeded generator instances."""
+import random
+
+import numpy as np
+
+
+def jitter(seed: int):
+    rng = random.Random(seed)
+    return rng.random()
+
+
+def make_rng(seed: int):
+    return np.random.default_rng(seed)

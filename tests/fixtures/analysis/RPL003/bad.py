@@ -1,0 +1,5 @@
+"""BAD: builtin hash() feeding a seed — salted per process."""
+
+
+def seed_for(name: str) -> int:
+    return hash(name) % (2**31)

@@ -1,0 +1,6 @@
+"""GOOD: crc32 is stable across processes and platforms."""
+import zlib
+
+
+def seed_for(name: str) -> int:
+    return zlib.crc32(name.encode()) % (2**31)

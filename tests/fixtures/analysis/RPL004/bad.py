@@ -1,0 +1,16 @@
+"""BAD: set iteration order leaking into a scheduling choice."""
+
+
+class Registry:
+    def __init__(self):
+        self.paged = set()
+
+
+def first_paged(reg: Registry):
+    for jid in reg.paged:  # arbitrary order
+        return jid
+    return None
+
+
+def drain(ready: set):
+    return max(ready, key=lambda j: j % 3)  # ties broken by set order

@@ -1,0 +1,20 @@
+"""GOOD: sets are consumed through an explicit total order."""
+
+
+class Registry:
+    def __init__(self):
+        self.paged = set()
+
+
+def first_paged(reg: Registry):
+    for jid in sorted(reg.paged):
+        return jid
+    return None
+
+
+def drain(ready: set):
+    return sorted(ready, key=lambda j: (j % 3, j))[-1]
+
+
+def size(ready: set):
+    return len(ready)  # order-free folds are fine

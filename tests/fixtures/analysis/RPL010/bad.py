@@ -1,0 +1,27 @@
+"""BAD: dispatch over an enum missing members, with no default."""
+import enum
+
+
+class JobState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    FINISHED = "finished"
+    FAILED = "failed"
+
+
+def on_transition(job):
+    # if/elif chain: FAILED is silently dropped and there is no else
+    if job.state is JobState.QUEUED:
+        return "wait"
+    elif job.state is JobState.RUNNING:
+        return "tick"
+    elif job.state is JobState.FINISHED:
+        return "done"
+
+
+KIND_LABEL = {
+    # dict dispatch: no default possible, FAILED missing
+    JobState.QUEUED: "q",
+    JobState.RUNNING: "r",
+    JobState.FINISHED: "f",
+}

@@ -1,0 +1,34 @@
+"""GOOD: exhaustive dispatch, or an explicit default branch."""
+import enum
+
+
+class JobState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    FINISHED = "finished"
+    FAILED = "failed"
+
+
+def on_transition(job):
+    if job.state is JobState.QUEUED:
+        return "wait"
+    elif job.state is JobState.RUNNING:
+        return "tick"
+    else:
+        # explicit default: FINISHED and FAILED need no action here
+        return "done"
+
+
+def classify(job):
+    if job.state in (JobState.QUEUED, JobState.RUNNING):
+        return "live"
+    elif job.state in (JobState.FINISHED, JobState.FAILED):
+        return "terminal"
+
+
+KIND_LABEL = {
+    JobState.QUEUED: "q",
+    JobState.RUNNING: "r",
+    JobState.FINISHED: "f",
+    JobState.FAILED: "x",
+}

@@ -1,0 +1,22 @@
+"""BAD: lifecycle table with a missing key, a non-absorbing terminal
+state, a missing crash-recovery requeue edge, and an unreachable state."""
+import enum
+
+
+class CtlState(enum.Enum):
+    SUBMITTED = "submitted"
+    RUNNING = "running"
+    PAUSED = "paused"
+    FINISHED = "finished"
+
+
+TERMINAL = frozenset({CtlState.FINISHED})
+
+TRANSITIONS = {
+    CtlState.SUBMITTED: frozenset({CtlState.RUNNING}),
+    # RUNNING has no requeue edge back to SUBMITTED
+    CtlState.RUNNING: frozenset({CtlState.FINISHED}),
+    # PAUSED has no successor set at all, and is unreachable
+    # FINISHED is terminal yet has a successor
+    CtlState.FINISHED: frozenset({CtlState.SUBMITTED}),
+}

@@ -1,0 +1,26 @@
+"""GOOD: complete, absorbing-terminal, requeue-edged, reachable table."""
+import enum
+
+
+class CtlState(enum.Enum):
+    SUBMITTED = "submitted"
+    RUNNING = "running"
+    PAUSED = "paused"
+    FINISHED = "finished"
+
+
+TERMINAL = frozenset({CtlState.FINISHED})
+
+TRANSITIONS = {
+    CtlState.SUBMITTED: frozenset(
+        {CtlState.RUNNING, CtlState.PAUSED, CtlState.FINISHED}
+    ),
+    CtlState.RUNNING: frozenset({CtlState.SUBMITTED, CtlState.FINISHED}),
+    CtlState.PAUSED: frozenset({CtlState.SUBMITTED}),
+    CtlState.FINISHED: frozenset(),
+}
+
+_ENGINE_TO_CTL = {
+    "running": CtlState.RUNNING,
+    "finished": CtlState.FINISHED,
+}

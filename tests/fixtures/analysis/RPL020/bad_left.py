@@ -1,0 +1,14 @@
+"""BAD pair, simulated side: emits PAGE_OUT, PAGE_IN and REJECT."""
+from kinds import EvKind  # fixture-local namespace
+
+
+def page_out(log, job):
+    log.append((EvKind.PAGE_OUT, job))
+
+
+def page_in(log, job):
+    log.append((EvKind.PAGE_IN, job))
+
+
+def reject(log, job):
+    log.append((EvKind.REJECT, job))

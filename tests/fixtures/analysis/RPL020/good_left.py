@@ -1,0 +1,10 @@
+"""GOOD pair, simulated side: emits PAGE_OUT and PAGE_IN."""
+from kinds import EvKind  # fixture-local namespace
+
+
+def page_out(log, job):
+    log.append((EvKind.PAGE_OUT, job))
+
+
+def page_in(log, job):
+    log.append((EvKind.PAGE_IN, job))

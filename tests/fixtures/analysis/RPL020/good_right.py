@@ -1,0 +1,10 @@
+"""GOOD pair, live side: matching emission sites for both kinds."""
+from kinds import EvKind  # fixture-local namespace
+
+
+def on_page_out(log, job):
+    log.append((EvKind.PAGE_OUT, job))
+
+
+def on_page_in(log, job):
+    log.append((EvKind.PAGE_IN, job))

@@ -1,0 +1,14 @@
+"""BAD: an Engine implementation missing part of the protocol."""
+
+
+class Simulator:
+    def submit(self, job):
+        pass
+
+    def run(self):
+        pass
+
+    def result(self):
+        return None
+
+    # decision_log() is missing: isinstance(sim, Engine) would fail

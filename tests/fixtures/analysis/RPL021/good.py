@@ -1,0 +1,17 @@
+"""GOOD: the full Engine protocol surface, partly via a base class."""
+
+
+class _ResultMixin:
+    def result(self):
+        return None
+
+    def decision_log(self):
+        return []
+
+
+class Simulator(_ResultMixin):
+    def submit(self, job):
+        pass
+
+    def run(self):
+        pass

@@ -1,0 +1,16 @@
+"""BAD: grouped store writes with no wrapping transaction."""
+
+
+class Daemon:
+    def __init__(self, store):
+        self.store = store
+
+    def submit_held(self, spec):
+        # a crash between the two writes leaves the job schedulable
+        job_id = self.store.add_job(spec)
+        self.store.set_state(job_id, "paused")
+        return job_id
+
+    def requeue_all(self, jids):
+        for jid in jids:  # write-per-iteration: the group is not atomic
+            self.store.set_state(jid, "submitted")

@@ -1,0 +1,21 @@
+"""GOOD: grouped writes are crash-atomic; single writes stand alone."""
+
+
+class Daemon:
+    def __init__(self, store):
+        self.store = store
+
+    def submit_held(self, spec):
+        with self.store.transaction():
+            job_id = self.store.add_job(spec)
+            self.store.set_state(job_id, "paused")
+        return job_id
+
+    def requeue_all(self, jids):
+        with self.store.transaction():
+            for jid in jids:
+                self.store.set_state(jid, "submitted")
+
+    def cancel(self, jid):
+        # one write: JobStore write methods are internally transactional
+        self.store.set_state(jid, "cancelled")

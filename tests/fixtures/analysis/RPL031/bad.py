@@ -1,0 +1,15 @@
+"""BAD: shared daemon state mutated off-lock."""
+import threading
+
+
+class Daemon:
+    def __init__(self):
+        self._ctl_lock = threading.RLock()
+        self._active = set()
+        self._pending_cancel = set()
+
+    def on_finish(self, jid):
+        self._active.discard(jid)  # handler threads read this under the lock
+
+    def cancel(self, jid):
+        self._pending_cancel = self._pending_cancel | {jid}

@@ -1,0 +1,21 @@
+"""GOOD: every mutation of shared state holds the server lock."""
+import threading
+
+
+class Daemon:
+    def __init__(self):
+        self._ctl_lock = threading.RLock()
+        self._active = set()
+        self._pending_cancel = set()
+
+    def on_finish(self, jid):
+        with self._ctl_lock:
+            self._active.discard(jid)
+
+    def cancel(self, jid):
+        with self._ctl_lock:
+            self._pending_cancel.add(jid)
+
+    def snapshot(self):
+        with self._ctl_lock:
+            return sorted(self._active)

@@ -1,0 +1,220 @@
+"""repro.analysis self-tests (ISSUE 8 tentpole).
+
+Every RPL rule has a paired good/bad fixture under
+``tests/fixtures/analysis/``: the bad snippet must trip exactly its rule,
+the good twin must come back fully clean (under *all* rules — the fixture
+config makes every fixture file a decision path). On top of that: the
+shipped tree must be clean end-to-end with the repo ``analysis.toml``
+(exit 0 on ``src/``), each bad fixture must drive a non-zero CLI exit,
+suppressions must require reasons and report unuse, and the full-tree
+pass must stay under the 5 s budget that keeps it cheap enough to gate
+every PR.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, load_config, run_analysis
+from repro.analysis.config import ConfigError
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures" / "analysis"
+FIXTURE_CFG = FIXTURES / "analysis.toml"
+
+# rule -> (good fixture files, bad fixture files), relative to FIXTURES
+PAIRED = {rule: ([f"{rule}/good.py"], [f"{rule}/bad.py"]) for rule in RULES}
+PAIRED["RPL020"] = (
+    ["RPL020/good_left.py", "RPL020/good_right.py"],
+    ["RPL020/bad_left.py", "RPL020/bad_right.py"],
+)
+
+
+def _run(files, cfg_path=FIXTURE_CFG):
+    cfg = load_config(cfg_path)
+    return run_analysis([FIXTURES / f for f in files], cfg)
+
+
+def _cli(args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd,
+        capture_output=True,
+        text=True,
+    )
+
+
+# ----------------------------------------------------------------------
+# fixtures: one passing and one failing per rule
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_bad_fixture_trips_rule(rule):
+    report = _run(PAIRED[rule][1])
+    rules_hit = {f.rule for f in report.findings}
+    assert rule in rules_hit, (
+        f"{rule} bad fixture produced {sorted(rules_hit)}:\n"
+        + "\n".join(f"{f.location()} {f.rule} {f.message}" for f in report.findings)
+    )
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_good_fixture_is_clean(rule):
+    report = _run(PAIRED[rule][0])
+    assert report.clean, "\n".join(
+        f"{f.location()} {f.rule} {f.message}" for f in report.all_findings()
+    )
+
+
+def test_every_rule_has_fixture_pair():
+    # the catalog and the fixture tree must not drift apart
+    dirs = {p.name for p in FIXTURES.iterdir() if p.is_dir()}
+    assert dirs == set(RULES)
+    for rule, (good, bad) in PAIRED.items():
+        for f in good + bad:
+            assert (FIXTURES / f).is_file(), f"missing fixture {f} for {rule}"
+
+
+# ----------------------------------------------------------------------
+# rule-specific shape checks
+# ----------------------------------------------------------------------
+
+
+def test_rpl010_flags_both_dispatch_shapes():
+    report = _run(PAIRED["RPL010"][1])
+    msgs = [f.message for f in report.findings if f.rule == "RPL010"]
+    assert any("if/elif dispatch" in m for m in msgs)
+    assert any("dict dispatch" in m for m in msgs)
+    assert any("FAILED" in m for m in msgs)
+
+
+def test_rpl011_reports_each_inconsistency():
+    report = _run(PAIRED["RPL011"][1])
+    msgs = " | ".join(f.message for f in report.findings if f.rule == "RPL011")
+    assert "no successor set" in msgs  # PAUSED missing from TRANSITIONS
+    assert "must be absorbing" in msgs  # FINISHED -> SUBMITTED
+    assert "requeue edge" in msgs  # RUNNING can't get back to SUBMITTED
+    assert "unreachable" in msgs  # PAUSED
+
+
+def test_rpl020_names_the_forked_member():
+    report = _run(PAIRED["RPL020"][1])
+    forks = [f for f in report.findings if f.rule == "RPL020"]
+    assert [f.symbol for f in forks] == ["EvKind.REJECT"]
+    # the finding lands on the side that is MISSING the reference
+    assert forks[0].path.endswith("bad_right.py")
+
+
+def test_rpl030_flags_each_unwrapped_write():
+    report = _run(PAIRED["RPL030"][1])
+    lines = {f.line for f in report.findings if f.rule == "RPL030"}
+    assert len(lines) == 3  # add_job + set_state in submit_held, loop write
+
+
+def test_rpl031_flags_method_call_and_rebind():
+    report = _run(PAIRED["RPL031"][1])
+    symbols = sorted(f.symbol for f in report.findings if f.rule == "RPL031")
+    assert symbols == ["_active", "_pending_cancel"]
+
+
+# ----------------------------------------------------------------------
+# suppressions
+# ----------------------------------------------------------------------
+
+
+def test_suppression_requires_reason(tmp_path):
+    cfg = tmp_path / "analysis.toml"
+    cfg.write_text('[[suppress]]\nrule = "RPL001"\npath = "x.py"\nreason = "  "\n')
+    with pytest.raises(ConfigError, match="reason"):
+        load_config(cfg)
+
+
+def test_suppression_matches_and_reports(tmp_path):
+    cfg = tmp_path / "analysis.toml"
+    cfg.write_text(
+        "[analysis]\n"
+        'decision_paths = ["."]\n'
+        "[[suppress]]\n"
+        'rule = "RPL001"\n'
+        'path = "clock.py"\n'
+        'symbol = "time.time"\n'
+        'reason = "timestamp is record metadata"\n'
+        "[[suppress]]\n"
+        'rule = "RPL003"\n'
+        'path = "never.py"\n'
+        'reason = "stale entry"\n'
+    )
+    src = tmp_path / "clock.py"
+    src.write_text("import time\n\nnow = time.time()\n")
+    report = run_analysis([src], load_config(cfg))
+    assert report.clean
+    assert [s.reason for _, s in report.suppressed] == ["timestamp is record metadata"]
+    assert [s.rule for s in report.unused_suppressions] == ["RPL003"]
+
+
+def test_unknown_rule_in_suppression_is_config_error(tmp_path):
+    cfg = tmp_path / "analysis.toml"
+    cfg.write_text('[[suppress]]\nrule = "RPL999"\npath = "x"\nreason = "r"\n')
+    with pytest.raises(ConfigError, match="RPL999"):
+        load_config(cfg)
+
+
+# ----------------------------------------------------------------------
+# shipped tree + CLI + budget
+# ----------------------------------------------------------------------
+
+
+def test_shipped_tree_is_clean():
+    cfg = load_config(REPO / "analysis.toml")
+    report = run_analysis([REPO / "src"], cfg)
+    assert report.clean, "\n".join(
+        f"{f.location()} {f.rule} {f.message}" for f in report.all_findings()
+    )
+    # the shipped suppression list carries no dead entries
+    assert report.unused_suppressions == []
+
+
+def test_full_tree_pass_under_budget():
+    cfg = load_config(REPO / "analysis.toml")
+    report = run_analysis([REPO / "src"], cfg)
+    assert report.files_checked > 50
+    assert report.elapsed_s < 5.0, f"lint took {report.elapsed_s:.2f}s; gate budget is 5s"
+
+
+def test_cli_exit_codes_and_json():
+    clean = _cli(["src", "--json"])
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    payload = json.loads(clean.stdout)
+    assert payload["clean"] is True
+    assert payload["findings"] == []
+    assert payload["files_checked"] > 50
+    assert all("reason" in s for s in payload["suppressed"])
+
+    bad = _cli(
+        ["--config", str(FIXTURE_CFG), str(FIXTURES / "RPL003" / "bad.py"), "--json"]
+    )
+    assert bad.returncode == 1
+    payload = json.loads(bad.stdout)
+    assert payload["clean"] is False
+    assert payload["findings"][0]["rule"] == "RPL003"
+
+    usage = _cli(["no/such/path.py"])
+    assert usage.returncode == 2
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_cli_nonzero_on_each_bad_fixture(rule):
+    bad = _cli(
+        ["--config", str(FIXTURE_CFG)] + [str(FIXTURES / f) for f in PAIRED[rule][1]]
+    )
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+
+
+def test_list_rules_covers_catalog():
+    out = _cli(["--list-rules"])
+    assert out.returncode == 0
+    for rule in RULES:
+        assert rule in out.stdout
