@@ -17,11 +17,11 @@ echo "== import-smoke: pytest --collect-only =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest --collect-only -q >/dev/null
 echo "ok"
 
-echo "== static-analysis: repro-lint (determinism/parity/lifecycle/discipline) =="
+echo "== static-analysis: repro-lint (determinism/parity/lifecycle/concurrency/taint) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis src
 
 if command -v mypy >/dev/null 2>&1; then
-    echo "== static-analysis: mypy --strict (src/repro/core + src/repro/ctl) =="
+    echo "== static-analysis: mypy --strict (src/repro/core + src/repro/ctl + src/repro/analysis) =="
     mypy
 else
     echo "== static-analysis: mypy not installed locally, skipped (CI runs it) =="

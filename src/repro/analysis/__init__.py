@@ -12,7 +12,10 @@ Rule families (full catalog in ROADMAP "Shipped subsystems"):
 
 ``RPL00x`` determinism lint (decision-path modules only)
     RPL001 wall-clock read, RPL002 unseeded RNG, RPL003 builtin
-    ``hash()``, RPL004 order-sensitive iteration over a ``set``.
+    ``hash()``, RPL004 order-sensitive iteration over a ``set``,
+    RPL005 interprocedural taint — a clock/RNG value flowing through
+    helpers, returns, or fields into a decision log, event ordinal,
+    or ordering key.
 ``RPL01x`` enum/state exhaustiveness
     RPL010 non-exhaustive enum dispatch, RPL011 ctl lifecycle-table
     consistency (coverage, terminal absorption, requeue edges,
@@ -24,6 +27,12 @@ Rule families (full catalog in ROADMAP "Shipped subsystems"):
 ``RPL03x`` store/lock discipline (``ctl/daemon.py``)
     RPL030 JobStore writes outside a crash-atomic transaction,
     RPL031 shared-state mutation outside the server lock.
+``RPL04x`` concurrency (cross-file, on the shared call graph)
+    RPL040 lock-order cycles across ``with``/``acquire`` sites
+    (interprocedural, follows contextmanagers like
+    ``store.transaction()``), RPL041 field access inconsistent with
+    its inferred guarding lock, RPL042 blocking call (sleep / socket
+    I/O / sqlite txn control) while holding a lock.
 
 Intentional exceptions are suppressed in ``analysis.toml`` — every
 suppression must carry a non-empty ``reason`` string.

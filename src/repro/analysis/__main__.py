@@ -37,8 +37,19 @@ def main(argv: Optional[List[str]] = None) -> int:
     )
     parser.add_argument(
         "--json",
-        action="store_true",
-        help="emit the full report as JSON on stdout",
+        nargs="?",
+        const="-",
+        default=None,
+        metavar="FILE",
+        help="emit the full report as JSON: to stdout with no FILE (then "
+        "--format is ignored), or to FILE alongside the chosen format",
+    )
+    parser.add_argument(
+        "--format",
+        choices=("text", "github"),
+        default="text",
+        help="finding output format: human-readable text (default), or "
+        "GitHub workflow commands (::error/::warning annotations)",
     )
     parser.add_argument(
         "--list-rules", action="store_true", help="print the rule catalog and exit"
@@ -71,9 +82,26 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     report = run_analysis(paths, cfg)
 
-    if args.json:
+    if args.json == "-":
         json.dump(report.to_dict(), sys.stdout, indent=2)
         print()
+        return 0 if report.clean else 1
+    if args.json is not None:
+        Path(args.json).write_text(
+            json.dumps(report.to_dict(), indent=2) + "\n", encoding="utf-8"
+        )
+
+    if args.format == "github":
+        for f in report.all_findings():
+            print(
+                f"::error file={f.path},line={f.line},col={f.col},"
+                f"title=repro-lint {f.rule}::{_gh_escape(f'{f.rule} {f.message}')}"
+            )
+        for s in report.unused_suppressions:
+            detail = f"unused suppression {s.rule} path={s.path!r}" + (
+                f" symbol={s.symbol!r}" if s.symbol else ""
+            )
+            print(f"::warning title=repro-lint::{_gh_escape(detail)}")
     else:
         for f in report.all_findings():
             print(f"{f.location()}: {f.rule} {f.message}")
@@ -83,14 +111,19 @@ def main(argv: Optional[List[str]] = None) -> int:
                 + (f" symbol={s.symbol!r}" if s.symbol else ""),
                 file=sys.stderr,
             )
-        n = len(report.all_findings())
-        print(
-            f"repro.analysis: {report.files_checked} files, "
-            f"{n} finding{'s' if n != 1 else ''}, "
-            f"{len(report.suppressed)} suppressed, "
-            f"{report.elapsed_s:.2f}s"
-        )
+    n = len(report.all_findings())
+    print(
+        f"repro.analysis: {report.files_checked} files, "
+        f"{n} finding{'s' if n != 1 else ''}, "
+        f"{len(report.suppressed)} suppressed, "
+        f"{report.elapsed_s:.2f}s"
+    )
     return 0 if report.clean else 1
+
+
+def _gh_escape(message: str) -> str:
+    """Escape a workflow-command message (the data after ``::``)."""
+    return message.replace("%", "%25").replace("\r", "%0D").replace("\n", "%0A")
 
 
 if __name__ == "__main__":

@@ -10,7 +10,7 @@ from __future__ import annotations
 import ast
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, FrozenSet, Iterator, List, Optional, Tuple
 
 #: rule id -> one-line description (the ``--list-rules`` catalog; docs in
 #: ROADMAP must stay in sync — test_analysis has a drift check)
@@ -19,12 +19,16 @@ RULES: Dict[str, str] = {
     "RPL002": "unseeded random / numpy.random use on a decision path",
     "RPL003": "builtin hash() on a decision path (PYTHONHASHSEED-dependent)",
     "RPL004": "order-sensitive iteration over an unordered set on a decision path",
+    "RPL005": "wall-clock/RNG-derived value reaches a decision log, event ordinal, or ordering key",
     "RPL010": "non-exhaustive dispatch over a tracked enum without an explicit default",
     "RPL011": "ctl lifecycle transition table inconsistent (coverage/terminal/requeue/projection)",
     "RPL020": "engine-parity violation: event kind referenced by one engine of a pair only",
     "RPL021": "Engine implementation missing part of the protocol surface",
     "RPL030": "JobStore write outside a crash-atomic transaction block",
     "RPL031": "shared daemon state mutated outside the server lock",
+    "RPL040": "lock-order cycle across with/acquire sites (potential deadlock)",
+    "RPL041": "field access inconsistent with its inferred guarding lock",
+    "RPL042": "blocking call (sleep / socket I/O / sqlite txn control) while holding a lock",
 }
 
 
@@ -78,7 +82,9 @@ def dotted(node: ast.AST) -> Optional[str]:
     return None
 
 
-def enum_member(node: ast.AST, enums: Dict[str, frozenset]) -> Optional[Tuple[str, str]]:
+def enum_member(
+    node: ast.AST, enums: Dict[str, FrozenSet[str]]
+) -> Optional[Tuple[str, str]]:
     """``(enum_name, member)`` if ``node`` is ``<KnownEnum>.<attr>``.
 
     The member itself is *not* validated here — dispatch checkers report
@@ -93,7 +99,7 @@ def enum_member(node: ast.AST, enums: Dict[str, frozenset]) -> Optional[Tuple[st
     return None
 
 
-def iter_enum_refs(scope: ast.AST, enum_name: str):
+def iter_enum_refs(scope: ast.AST, enum_name: str) -> Iterator[Tuple[str, ast.Attribute]]:
     """Yield ``(member, node)`` for every ``<enum_name>.<member>`` in scope."""
     for node in ast.walk(scope):
         if (
@@ -115,7 +121,7 @@ def is_enum_classdef(node: ast.ClassDef) -> bool:
     return False
 
 
-def enum_members_of(node: ast.ClassDef) -> frozenset:
+def enum_members_of(node: ast.ClassDef) -> FrozenSet[str]:
     """Member names of an enum ClassDef (uppercase-style assignments)."""
     members: List[str] = []
     for stmt in node.body:
@@ -143,11 +149,15 @@ class TreeIndex:
                   checks with single-level-name inheritance resolution.
     """
 
-    enums: Dict[str, frozenset] = field(default_factory=dict)
+    enums: Dict[str, FrozenSet[str]] = field(default_factory=dict)
     set_attrs: Dict[str, str] = field(default_factory=dict)  # attr -> "cls.attr"
-    classes: Dict[str, Tuple[Tuple[str, ...], frozenset]] = field(default_factory=dict)
+    classes: Dict[str, Tuple[Tuple[str, ...], FrozenSet[str]]] = field(
+        default_factory=dict
+    )
 
-    def class_methods(self, name: str, _seen: Optional[frozenset] = None) -> frozenset:
+    def class_methods(
+        self, name: str, _seen: Optional[FrozenSet[str]] = None
+    ) -> FrozenSet[str]:
         """Methods of ``name`` including bases resolvable by name."""
         seen = _seen or frozenset()
         if name in seen or name not in self.classes:
@@ -183,7 +193,7 @@ def is_set_expr_literal(node: ast.AST) -> bool:
     return False
 
 
-def build_index(modules: List[Module], tracked_enums: frozenset) -> TreeIndex:
+def build_index(modules: List[Module], tracked_enums: FrozenSet[str]) -> TreeIndex:
     index = TreeIndex()
     for mod in modules:
         for node in ast.walk(mod.tree):

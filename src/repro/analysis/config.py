@@ -141,6 +141,51 @@ DEFAULT_LOCKED_ATTRS = (
     "_terminal_committed",
 )
 
+#: modules the RPL04x concurrency family analyzes (the lock-laden shared
+#: infrastructure; single-threaded library code would only add noise)
+DEFAULT_CONCURRENCY_PATHS = ("src/repro/core/", "src/repro/ctl/")
+
+#: callables whose result is a lock (matched on the dotted tail)
+DEFAULT_LOCK_FACTORIES = (
+    "Lock",
+    "RLock",
+    "Condition",
+    "Semaphore",
+    "BoundedSemaphore",
+)
+
+#: dotted-call suffixes that block the calling thread (RPL042)
+DEFAULT_BLOCKING_CALLS = (
+    "time.sleep",
+    "serve_forever",
+    "select.select",
+    "subprocess.run",
+    "subprocess.check_call",
+    "subprocess.check_output",
+)
+
+#: method names that block on a peer or the disk (RPL042); sqlite
+#: transaction control via execute("BEGIN/COMMIT/ROLLBACK ...") is
+#: detected separately
+DEFAULT_BLOCKING_ATTRS = (
+    "recv",
+    "recv_into",
+    "send",
+    "sendall",
+    "accept",
+    "connect",
+    "commit",
+)
+
+#: attribute names treated as decision logs by the RPL005 taint pass
+DEFAULT_TAINT_LOG_NAMES = ("decision_log", "decisions", "events", "placement_log")
+
+#: method names whose arguments are decision-log writes (RPL005)
+DEFAULT_TAINT_SINK_CALLS = ("append_decisions",)
+
+#: substrings marking an assignment target as an event ordinal (RPL005)
+DEFAULT_TAINT_ORDINAL_MARKERS = ("ordinal", "seq_no", "event_seq")
+
 
 @dataclass
 class AnalysisConfig:
@@ -157,6 +202,13 @@ class AnalysisConfig:
     store_write_methods: Tuple[str, ...] = DEFAULT_STORE_WRITE_METHODS
     lock_attr: str = DEFAULT_LOCK_ATTR
     locked_attrs: Tuple[str, ...] = DEFAULT_LOCKED_ATTRS
+    concurrency_paths: Tuple[str, ...] = DEFAULT_CONCURRENCY_PATHS
+    lock_factories: Tuple[str, ...] = DEFAULT_LOCK_FACTORIES
+    blocking_calls: Tuple[str, ...] = DEFAULT_BLOCKING_CALLS
+    blocking_attrs: Tuple[str, ...] = DEFAULT_BLOCKING_ATTRS
+    taint_log_names: Tuple[str, ...] = DEFAULT_TAINT_LOG_NAMES
+    taint_sink_calls: Tuple[str, ...] = DEFAULT_TAINT_SINK_CALLS
+    taint_ordinal_markers: Tuple[str, ...] = DEFAULT_TAINT_ORDINAL_MARKERS
     suppressions: Tuple[Suppression, ...] = ()
 
     def is_decision_path(self, rel: str) -> bool:
@@ -164,6 +216,9 @@ class AnalysisConfig:
 
     def is_discipline_path(self, rel: str) -> bool:
         return any(_path_match(rel, p) for p in self.discipline_paths)
+
+    def is_concurrency_path(self, rel: str) -> bool:
+        return any(_path_match(rel, p) for p in self.concurrency_paths)
 
 
 def _str_tuple(raw: Any, key: str) -> Tuple[str, ...]:
@@ -232,6 +287,29 @@ def load_config(path: Optional[Path]) -> AnalysisConfig:
         cfg.lock_attr = str(disc["lock_attr"])
     if "locked_attrs" in disc:
         cfg.locked_attrs = _str_tuple(disc["locked_attrs"], "discipline.locked_attrs")
+
+    conc = section.get("concurrency", {})
+    if not isinstance(conc, dict):
+        raise ConfigError("[analysis.concurrency] must be a table")
+    for toml_key, attr in (
+        ("paths", "concurrency_paths"),
+        ("lock_factories", "lock_factories"),
+        ("blocking_calls", "blocking_calls"),
+        ("blocking_attrs", "blocking_attrs"),
+    ):
+        if toml_key in conc:
+            setattr(cfg, attr, _str_tuple(conc[toml_key], f"concurrency.{toml_key}"))
+
+    taint = section.get("taint", {})
+    if not isinstance(taint, dict):
+        raise ConfigError("[analysis.taint] must be a table")
+    for toml_key, attr in (
+        ("log_names", "taint_log_names"),
+        ("sink_calls", "taint_sink_calls"),
+        ("ordinal_markers", "taint_ordinal_markers"),
+    ):
+        if toml_key in taint:
+            setattr(cfg, attr, _str_tuple(taint[toml_key], f"taint.{toml_key}"))
 
     sups: List[Suppression] = []
     for i, entry in enumerate(data.get("suppress", [])):

@@ -34,7 +34,7 @@ overreach in principle; in this tree attribute names like ``paged`` or
 from __future__ import annotations
 
 import ast
-from typing import Iterable, List, Optional, Set, Tuple
+from typing import FrozenSet, Iterable, List, Optional, Set, Tuple
 
 from repro.analysis.base import (
     Finding,
@@ -188,7 +188,7 @@ class _SetIterationChecker:
         self._scan(self.mod.tree.body, frozenset())
         return self.findings
 
-    def _scan(self, body: List[ast.stmt], inherited: frozenset) -> None:
+    def _scan(self, body: List[ast.stmt], inherited: FrozenSet[str]) -> None:
         nodes, scopes = _shallow(body)
         local = set(inherited) | self._assigned_sets(nodes)
         for node in nodes:

@@ -31,7 +31,7 @@ the locking protocol stays visible in ``analysis.toml``.
 from __future__ import annotations
 
 import ast
-from typing import List, Set
+from typing import Callable, List, Set
 
 from repro.analysis.base import Finding, Module, dotted
 from repro.analysis.config import AnalysisConfig
@@ -54,7 +54,7 @@ def check_discipline(mod: Module, cfg: AnalysisConfig) -> List[Finding]:
     return findings
 
 
-def _with_guards(fn: ast.AST, predicate) -> Set[int]:
+def _with_guards(fn: ast.AST, predicate: Callable[[ast.AST], bool]) -> Set[int]:
     """ids of every AST node lexically inside a matching ``with`` block."""
     guarded: Set[int] = set()
 

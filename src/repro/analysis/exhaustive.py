@@ -31,7 +31,7 @@ RPL011  the ctl lifecycle table must be self-consistent: a module that
 from __future__ import annotations
 
 import ast
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
 
 from repro.analysis.base import Finding, Module, TreeIndex, enum_member
 from repro.analysis.config import AnalysisConfig
@@ -52,7 +52,7 @@ def check_exhaustiveness(
 
 
 def _branch_members(
-    test: ast.expr, enums: Dict[str, frozenset]
+    test: ast.expr, enums: Dict[str, FrozenSet[str]]
 ) -> Optional[Tuple[str, str, Set[str]]]:
     """``(enum, subject_dump, members)`` for one recognisable branch test."""
     if isinstance(test, ast.BoolOp) and isinstance(test.op, ast.Or):

@@ -13,14 +13,17 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
-from repro.analysis.base import Finding, Module, TreeIndex, build_index
+from repro.analysis.base import Finding, Module, build_index
+from repro.analysis.callgraph import build_callgraph
+from repro.analysis.concurrency import check_concurrency
 from repro.analysis.config import AnalysisConfig, Suppression
 from repro.analysis.determinism import check_determinism
 from repro.analysis.discipline import check_discipline
 from repro.analysis.exhaustive import check_exhaustiveness
 from repro.analysis.parity import check_engine_surface, check_parity_pair
+from repro.analysis.taint import check_taint
 
 
 @dataclass
@@ -108,8 +111,12 @@ def run_analysis(paths: List[Path], cfg: AnalysisConfig) -> Report:
         modules.append(mod)
         by_rel[rel] = mod
     report.files_checked = len(modules)
+    # canonical order: findings (and every index built from the modules)
+    # must be invariant to the order paths were given on the command line
+    modules.sort(key=lambda m: m.rel)
 
     index = build_index(modules, frozenset(cfg.tracked_enums))
+    callgraph = build_callgraph(modules, index, cfg.lock_factories)
 
     raw: List[Finding] = []
     for mod in modules:
@@ -117,6 +124,10 @@ def run_analysis(paths: List[Path], cfg: AnalysisConfig) -> Report:
         raw.extend(check_exhaustiveness(mod, cfg, index))
         raw.extend(check_engine_surface(mod, cfg, index))
         raw.extend(check_discipline(mod, cfg))
+
+    # cross-file passes on the shared call graph
+    raw.extend(check_concurrency(callgraph, cfg))
+    raw.extend(check_taint(callgraph, cfg))
 
     # cross-file parity pairs: run when at least one endpoint is in the
     # scanned set; the other endpoint is parsed on demand so a partial
@@ -129,7 +140,7 @@ def run_analysis(paths: List[Path], cfg: AnalysisConfig) -> Report:
         right = by_rel.get(rp) or _load_endpoint(cfg.root / rp, rp)
         raw.extend(check_parity_pair(pair, left, right))
 
-    used: set = set()
+    used: Set[Suppression] = set()
     for f in sorted(raw, key=lambda f: (f.path, f.line, f.col, f.rule, f.symbol)):
         for s in cfg.suppressions:
             if s.matches(f):

@@ -272,6 +272,10 @@ class CtlDaemon:
             pauses = sorted((self._pending_pause & self._active) - set(cancels))
             self._pending_cancel -= set(cancels)
             self._pending_pause -= set(pauses)
+            # snapshot for the commit below: this thread is the only
+            # writer, so the copy stays current for the whole epoch, and
+            # reads inside the store transaction need not take the lock
+            already_terminal = set(self._terminal_committed)
         cancelled: List[Tuple[int, Any]] = []
         paused: List[Tuple[int, Any]] = []
         terminal_engine = (JobState.FINISHED, JobState.FAILED, JobState.CANCELLED)
@@ -313,11 +317,11 @@ class CtlDaemon:
             for i, delta in enumerate(delta_devices):
                 self.store.append_decisions(f"device:{i}", delta)
             for jid, done in sorted(snap.progress.items()):
-                if jid in self._terminal_committed:
+                if jid in already_terminal:
                     continue
                 self.store.update_progress(jid, done, now=now)
             for jid, est in sorted(snap.states.items()):
-                if jid in self._terminal_committed:
+                if jid in already_terminal:
                     continue
                 target = ctl_state_of(est, rejected=jid in snap.rejected)
                 row = self.store.get_job(jid)
@@ -376,13 +380,16 @@ class CtlDaemon:
         stats = res.stats
         now = time.time()
         newly_terminal: Set[int] = set()  # merged under the lock post-commit
+        with self._ctl_lock:
+            # snapshot: scheduler thread is the sole writer (see _on_epoch)
+            already_terminal = set(self._terminal_committed)
         with self.store.transaction():
             self.store.append_decisions("placement", delta_placement)
             for i, delta in enumerate(delta_devices):
                 self.store.append_decisions(f"device:{i}", delta)
             for spec, _ in batch:
                 jid = spec.job_id
-                if jid in self._terminal_committed:
+                if jid in already_terminal:
                     continue
                 row = self.store.get_job(jid)
                 if row is None or row["state"] not in _ACTIVE_STATES:

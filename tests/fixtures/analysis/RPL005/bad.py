@@ -1,0 +1,19 @@
+"""BAD: the wall-clock reading flows through a helper function and
+lands in an ordering key and the decision log — neither the sink line
+nor the helper calls ``time.time`` directly."""
+import time
+
+
+def stamp():
+    return time.time()
+
+
+class Scheduler:
+    def __init__(self):
+        self.decision_log = []
+
+    def pick(self, jobs):
+        t = stamp()
+        ordered = sorted(jobs, key=lambda j: t - j.arrival)
+        self.decision_log.append(("pick", t))
+        return ordered[0]

@@ -1,0 +1,20 @@
+"""GOOD: the timestamp is record metadata only — ordering and the
+decision log stay pure functions of the trace."""
+import time
+
+
+def stamp():
+    return time.time()
+
+
+class Scheduler:
+    def __init__(self):
+        self.decision_log = []
+        self.metadata = {}
+
+    def pick(self, jobs):
+        ordered = sorted(jobs, key=lambda j: j.arrival)
+        choice = ordered[0]
+        self.metadata[choice.name] = {"picked_at": stamp()}
+        self.decision_log.append(("pick", choice.name))
+        return choice

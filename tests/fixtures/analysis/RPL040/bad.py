@@ -1,0 +1,40 @@
+"""BAD: two call paths take the same pair of locks in opposite orders.
+
+``claim`` holds the ctl lock and enters the store transaction (ctl ->
+store); ``commit_epoch`` opens the transaction first and then takes the
+ctl lock inside it (store -> ctl) — the PR 7 inversion shape. The store
+lock is only ever acquired *inside* ``transaction()``, so catching this
+requires following the call into another class.
+"""
+import threading
+from contextlib import contextmanager
+
+
+class Store:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self.rows = {}
+
+    @contextmanager
+    def transaction(self):
+        with self._lock:
+            yield self
+
+
+class Daemon:
+    def __init__(self, store: "Store"):
+        self._ctl_lock = threading.RLock()
+        self.store = store
+        self._claimed = {}
+
+    def claim(self, jid):
+        with self._ctl_lock:
+            self._claimed[jid] = "claimed"
+            with self.store.transaction():
+                self.store.rows[jid] = "claimed"
+
+    def commit_epoch(self, jid):
+        with self.store.transaction():
+            self.store.rows[jid] = "done"
+            with self._ctl_lock:
+                self._claimed.pop(jid, None)

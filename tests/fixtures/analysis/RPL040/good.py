@@ -1,0 +1,38 @@
+"""GOOD: every path acquires the two locks in one global order.
+
+Both ``claim`` and ``commit_epoch`` take the ctl lock first and only
+then enter the store transaction — the lock-order graph has a single
+edge ctl -> store and no cycle.
+"""
+import threading
+from contextlib import contextmanager
+
+
+class Store:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self.rows = {}
+
+    @contextmanager
+    def transaction(self):
+        with self._lock:
+            yield self
+
+
+class Daemon:
+    def __init__(self, store: "Store"):
+        self._ctl_lock = threading.RLock()
+        self.store = store
+        self._claimed = {}
+
+    def claim(self, jid):
+        with self._ctl_lock:
+            self._claimed[jid] = "claimed"
+            with self.store.transaction():
+                self.store.rows[jid] = "claimed"
+
+    def commit_epoch(self, jid):
+        with self._ctl_lock:
+            with self.store.transaction():
+                self.store.rows[jid] = "done"
+            self._claimed.pop(jid, None)

@@ -1,0 +1,24 @@
+"""BAD: ``_inflight`` is guarded on most accesses, so the analysis
+infers ``Driver._lock`` as its guard — and flags the unguarded read in
+``poll`` and the unguarded ``.clear()`` in ``abort_all``."""
+import threading
+
+
+class Driver:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._inflight = {}
+
+    def start(self, jid, fut):
+        with self._lock:
+            self._inflight[jid] = fut
+
+    def finish(self, jid):
+        with self._lock:
+            self._inflight.pop(jid, None)
+
+    def poll(self, jid):
+        return self._inflight.get(jid)
+
+    def abort_all(self):
+        self._inflight.clear()

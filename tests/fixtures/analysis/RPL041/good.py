@@ -1,0 +1,29 @@
+"""GOOD: every ``_inflight`` access holds the lock. ``_bump`` touches
+``stats`` with no lexical ``with`` — but it is only ever called from
+sites that hold the lock, so must-hold-at-entry inference covers it."""
+import threading
+
+
+class Driver:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._inflight = {}
+        self.stats = {}
+
+    def start(self, jid, fut):
+        with self._lock:
+            self._inflight[jid] = fut
+            self._bump("started")
+
+    def finish(self, jid):
+        with self._lock:
+            self._inflight.pop(jid, None)
+            self._bump("finished")
+
+    def poll(self, jid):
+        with self._lock:
+            return self._inflight.get(jid)
+
+    def _bump(self, key):
+        # no lexical lock here: the guard is inherited from every caller
+        self.stats[key] = self.stats.get(key, 0) + 1

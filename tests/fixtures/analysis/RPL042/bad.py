@@ -1,0 +1,26 @@
+"""BAD: the lock is held across a sleep, a socket send, and SQLite
+transaction control — every thread contending for it now waits on the
+clock, the peer, or the disk."""
+import sqlite3
+import threading
+import time
+
+
+class Publisher:
+    def __init__(self, sock):
+        self._lock = threading.Lock()
+        self._conn = sqlite3.connect(":memory:")
+        self.sock = sock
+        self.queue = []
+
+    def publish(self, payload):
+        with self._lock:
+            time.sleep(0.05)
+            self.sock.sendall(payload)
+
+    def flush(self):
+        with self._lock:
+            self._conn.execute("BEGIN IMMEDIATE")
+            for item in self.queue:
+                self._conn.execute("INSERT INTO q VALUES (?)", (item,))
+            self._conn.execute("COMMIT")

@@ -1,0 +1,26 @@
+"""GOOD: snapshot under the lock, block outside it — the critical
+section only touches in-memory state."""
+import sqlite3
+import threading
+import time
+
+
+class Publisher:
+    def __init__(self, sock):
+        self._lock = threading.Lock()
+        self._conn = sqlite3.connect(":memory:")
+        self.sock = sock
+        self.queue = []
+
+    def publish(self, payload):
+        time.sleep(0.05)  # pacing happens before the critical section
+        with self._lock:
+            self.queue.append(payload)
+        self.sock.sendall(payload)
+
+    def flush(self):
+        with self._lock:
+            batch = list(self.queue)
+            self.queue.clear()
+        for item in batch:
+            self._conn.execute("INSERT INTO q VALUES (?)", (item,))
