@@ -1,0 +1,112 @@
+"""Event-core throughput: the 1000-device / 10^6-job diurnal sweep.
+
+The headline scalability claim of the event-core + placement-fast-path
+refactor: a fleet-scale discrete-event sweep — one thousand shadow
+devices, a million diurnal submissions (``tracegen.diurnal_trace``),
+placement plus full per-device simulation — must finish inside a hard
+wall budget. Like ``bench_analysis``, this bench *fails* when the budget
+is blown, so CI catches a superlinear regression in the event kernel,
+the LEAST_LOADED placer index, or the solo fast-forward path the moment
+it lands.
+
+Per-phase rows (trace generation / placement / simulation) localize a
+regression without a profiler. ``--fast`` runs the same pipeline at
+1/20 scale under a proportional budget for the consolidated snapshot
+and smoke lanes; ``--json`` writes the summary dict (CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import base_parser, emit, write_json
+from repro.core import GB, Cluster, MemoryConfig
+from repro.core.tracegen import diurnal_trace
+
+# Full-sweep wall budget, in seconds. The sweep runs ~85 s on the dev
+# container (3.5 s generation + ~21 s placement + ~60 s simulation);
+# the budget leaves slack for slower CI runners, not for an O(n)
+# regression — losing the placer index alone costs minutes.
+BUDGET_S = 240.0
+FAST_BUDGET_S = 60.0
+
+
+def run(argv=None) -> dict:
+    ap = argparse.ArgumentParser(
+        description=__doc__, parents=[base_parser()],
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--n-jobs", type=int, default=None, help="override trace size")
+    ap.add_argument("--n-devices", type=int, default=None, help="override fleet size")
+    args = ap.parse_args(argv)
+    if args.fast:
+        n_jobs, n_devices, budget = 50_000, 100, FAST_BUDGET_S
+    else:
+        n_jobs, n_devices, budget = 1_000_000, 1000, BUDGET_S
+    if args.n_jobs is not None:
+        n_jobs = args.n_jobs
+    if args.n_devices is not None:
+        n_devices = args.n_devices
+    memory = (
+        MemoryConfig(
+            paging=True, page_bandwidth=args.page_bandwidth_gbs * GB
+        )
+        if args.paging
+        else None
+    )
+
+    t0 = time.perf_counter()
+    jobs = diurnal_trace(n_jobs=n_jobs, seed=args.seed)
+    t1 = time.perf_counter()
+    cluster = Cluster(
+        n_devices=n_devices,
+        capacity=16 * GB,
+        policy="fifo",
+        strategy="least_loaded",
+        memory=memory,
+    )
+    res = cluster.run(jobs)
+    t2 = time.perf_counter()
+
+    gen_s, run_s = t1 - t0, t2 - t1
+    total_s = t2 - t0
+    finished = res.completed
+    iters = sum(s.iterations_done for s in res.per_job.values())
+    scale = f"devices={n_devices};jobs={n_jobs}"
+    emit("simloop/generate", gen_s * 1e6, scale)
+    emit("simloop/place_and_simulate", run_s * 1e6, scale)
+    emit(
+        "simloop/sweep",
+        total_s * 1e6,
+        f"{scale};iters={iters};jobs_per_s={n_jobs / total_s:.0f};"
+        f"budget_s={budget:.0f}",
+    )
+    if total_s >= budget:
+        raise RuntimeError(
+            f"diurnal sweep ({n_devices} devices, {n_jobs} jobs) took "
+            f"{total_s:.1f}s, budget is {budget:.0f}s: the event kernel or "
+            "the placement fast path has regressed"
+        )
+    if finished != n_jobs:
+        raise RuntimeError(
+            f"sweep lost jobs: {finished} of {n_jobs} completed"
+        )
+
+    results = {
+        "n_devices": n_devices,
+        "n_jobs": n_jobs,
+        "iterations": iters,
+        "generate_s": gen_s,
+        "place_and_simulate_s": run_s,
+        "total_s": total_s,
+        "jobs_per_s": n_jobs / total_s,
+        "avg_jct_s": res.avg_jct,
+        "budget_s": budget,
+        "within_budget": True,
+    }
+    write_json(args.json, results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

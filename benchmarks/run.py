@@ -14,40 +14,118 @@
   fig1/5       bench_memory       persistent/ephemeral taxonomy (live)
   roofline     roofline_report    §Roofline terms from the dry-run artifacts
   lint         bench_analysis     repro-lint full-tree cost vs its 5 s budget
+  simloop      bench_simloop      1000-device / 10^6-job diurnal sweep budget
+
+Default mode runs every bench at full scale and streams CSV; ``--snapshot
+DIR`` additionally writes a consolidated ``BENCH_<stamp>.json`` (per-bench
+CSV rows, return dict, wall time, pass/fail) that CI uploads as one
+artifact instead of a dozen per-bench JSON files. ``--fast`` propagates to
+every bench that understands it (an ``argv`` or ``fast`` parameter on its
+``run``); benches without a fast knob run at their only scale.
 """
 from __future__ import annotations
 
+import argparse
+import inspect
+import io
+import json
 import sys
+import time
 import traceback
+from contextlib import redirect_stdout
+from pathlib import Path
+
+MODULES = [
+    "benchmarks.bench_comparison",
+    "benchmarks.bench_schedulers",
+    "benchmarks.bench_cluster",
+    "benchmarks.bench_migration",
+    "benchmarks.bench_ctl",
+    "benchmarks.bench_fair",
+    "benchmarks.bench_hyperparam",
+    "benchmarks.bench_inference",
+    "benchmarks.bench_serve",
+    "benchmarks.bench_memory",
+    "benchmarks.bench_switching",
+    "benchmarks.bench_overhead",
+    "benchmarks.roofline_report",
+    "benchmarks.bench_analysis",
+    "benchmarks.bench_simloop",
+]
 
 
-def main() -> None:
+def _dispatch(fn, fast: bool):
+    """Call a bench ``run`` honoring whatever fast knob it exposes."""
+    params = inspect.signature(fn).parameters
+    if "argv" in params:
+        return fn(argv=["--fast"] if fast else [])
+    if fast and "fast" in params:
+        return fn(fast=True)
+    return fn()
+
+
+def _jsonable(value):
+    try:
+        json.dumps(value)
+        return value
+    except (TypeError, ValueError):
+        return repr(value)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--fast", action="store_true", help="pass the fast knob to every bench"
+    )
+    ap.add_argument(
+        "--snapshot",
+        metavar="DIR",
+        default=None,
+        help="also write a consolidated BENCH_<stamp>.json under DIR",
+    )
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
-    modules = [
-        "benchmarks.bench_comparison",
-        "benchmarks.bench_schedulers",
-        "benchmarks.bench_cluster",
-        "benchmarks.bench_migration",
-        "benchmarks.bench_ctl",
-        "benchmarks.bench_fair",
-        "benchmarks.bench_hyperparam",
-        "benchmarks.bench_inference",
-        "benchmarks.bench_serve",
-        "benchmarks.bench_memory",
-        "benchmarks.bench_switching",
-        "benchmarks.bench_overhead",
-        "benchmarks.roofline_report",
-        "benchmarks.bench_analysis",
-    ]
+    snapshot: dict = {}
     failed = []
-    for mod_name in modules:
+    for mod_name in MODULES:
+        entry = {"ok": False, "seconds": None, "rows": [], "result": None}
+        buf = io.StringIO()
+        t0 = time.perf_counter()
         try:
             mod = __import__(mod_name, fromlist=["run"])
-            mod.run()
+            with redirect_stdout(buf):
+                result = _dispatch(mod.run, args.fast)
+            entry["ok"] = True
+            entry["result"] = _jsonable(result)
         except Exception as e:  # noqa: BLE001 - benches must not kill the run
             failed.append(mod_name)
-            print(f"{mod_name},0.0,ERROR={type(e).__name__}:{e}", file=sys.stdout)
+            entry["error"] = f"{type(e).__name__}: {e}"
             traceback.print_exc(file=sys.stderr)
+        entry["seconds"] = time.perf_counter() - t0
+        out = buf.getvalue()
+        if out:
+            sys.stdout.write(out)
+        if "error" in entry:
+            print(f"{mod_name},0.0,ERROR={entry['error']}")
+        entry["rows"] = [
+            line for line in out.splitlines() if line.count(",") >= 2
+        ]
+        snapshot[mod_name.rsplit(".", 1)[-1]] = entry
+
+    if args.snapshot:
+        stamp = time.strftime("%Y%m%dT%H%M%S")
+        path = Path(args.snapshot) / f"BENCH_{stamp}.json"
+        path.parent.mkdir(parents=True, exist_ok=True)
+        payload = {
+            "stamp": stamp,
+            "fast": args.fast,
+            "ok": not failed,
+            "benchmarks": snapshot,
+        }
+        path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {path}", file=sys.stderr)
+
     if failed:
         sys.exit(1)
 

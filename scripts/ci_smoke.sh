@@ -62,6 +62,14 @@ echo "== benchmark smoke: control-plane durable epoch commits =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_ctl \
     --fast --json experiments/bench_ctl_smoke.json
 
+echo "== benchmark smoke: event-core diurnal sweep (50k jobs / 100 devices) =="
+# CI additionally runs the FULL 1000-device / 10^6-job sweep against its
+# hard wall budget (bench_simloop, no --fast) and the consolidated
+# --snapshot pass over every bench; locally the scaled-down sweep keeps
+# the smoke loop fast while exercising the same pipeline and budget check
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_simloop \
+    --fast --json experiments/bench_simloop_smoke.json
+
 echo "== ctl-smoke: daemon kill/restart recovery via repro-ctl =="
 # starts a real daemon, submits a 3-job trace over the CLI, SIGKILLs it
 # mid-fleet, restarts on the same store, and asserts recovery (decision-log

@@ -154,7 +154,12 @@ DEFAULT_LOCK_FACTORIES = (
     "BoundedSemaphore",
 )
 
-#: dotted-call suffixes that block the calling thread (RPL042)
+#: dotted-call suffixes that block the calling thread (RPL042).
+#: ``join`` covers thread/process joins (a join under a lock the worker
+#: needs to make progress is a deadlock, not a slow hold — the fleet
+#: driver's close() releases its condition before joining for exactly
+#: this reason); str.join never fires because a Constant receiver has no
+#: dotted name.
 DEFAULT_BLOCKING_CALLS = (
     "time.sleep",
     "serve_forever",
@@ -162,6 +167,7 @@ DEFAULT_BLOCKING_CALLS = (
     "subprocess.run",
     "subprocess.check_call",
     "subprocess.check_output",
+    "join",
 )
 
 #: method names that block on a peer or the disk (RPL042); sqlite

@@ -32,7 +32,9 @@ from repro.core.engine import (
     encode_decision,
     encode_decision_log,
 )
+from repro.core.events import EpochSchedule, EventQueue
 from repro.core.executor import ExecutorReport, SalusExecutor
+from repro.core.fleet import FleetDriver
 from repro.core.placement import (
     DeviceView,
     JobView,
@@ -71,7 +73,10 @@ __all__ = [
     "decode_decision",
     "encode_decision_log",
     "decode_decision_log",
-    # fleet epoch control plane
+    # event-core + fleet epoch control plane
+    "EventQueue",
+    "EpochSchedule",
+    "FleetDriver",
     "EpochSnapshot",
     "EpochControl",
     # engines + results

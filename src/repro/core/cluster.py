@@ -46,7 +46,9 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.engine import DecisionLog, ResultSurface, busy_seconds
+from repro.core.events import EpochSchedule
 from repro.core.executor import ExecutorReport, SalusExecutor
+from repro.core.fleet import FleetDriver
 from repro.core.memory import MemoryConfig
 from repro.core.placement import (
     DeviceView,
@@ -248,19 +250,30 @@ class _RebalanceMixin:
     def _init_rebalance(
         self,
         rebalancer: Optional[Rebalancer],
-        rebalance_interval: Optional[float],
+        rebalance_interval: Union[float, EpochSchedule, None],
         fault_injector: Optional[Any],
     ) -> None:
-        if rebalance_interval is not None and rebalance_interval <= 0:
-            raise ValueError(
-                f"rebalance_interval must be positive, got {rebalance_interval}"
-            )
-        if rebalancer is not None and rebalance_interval is None:
+        schedule: Optional[EpochSchedule]
+        if isinstance(rebalance_interval, EpochSchedule):
+            # the ctl daemon hands its commit cadence in directly, so the
+            # event-core schedule that drives on_epoch is the same object
+            # the engine's epoch loop consumes
+            schedule = rebalance_interval
+        elif rebalance_interval is not None:
+            if rebalance_interval <= 0:
+                raise ValueError(
+                    f"rebalance_interval must be positive, got {rebalance_interval}"
+                )
+            schedule = EpochSchedule(rebalance_interval)
+        else:
+            schedule = None
+        if rebalancer is not None and schedule is None:
             raise ValueError("a rebalancer needs rebalance_interval to ever run")
-        if rebalance_interval is not None and rebalancer is None:
+        if schedule is not None and rebalancer is None:
             rebalancer = Rebalancer()
         self.rebalancer = rebalancer
-        self.rebalance_interval = rebalance_interval
+        self.rebalance_schedule = schedule
+        self.rebalance_interval = None if schedule is None else schedule.interval
         self.fault_injector = fault_injector
         self._mig_seq = 0
 
@@ -289,7 +302,7 @@ class Cluster(_RebalanceMixin):
         memory: Optional[MemoryConfig] = None,
         deficit_quantum: Optional[int] = None,
         rebalancer: Optional[Rebalancer] = None,
-        rebalance_interval: Optional[float] = None,
+        rebalance_interval: Union[float, EpochSchedule, None] = None,
         fault_injector: Optional[Any] = None,
         on_epoch: Optional[Callable[..., Any]] = None,
     ) -> None:
@@ -356,7 +369,7 @@ class Cluster(_RebalanceMixin):
         for sim, dev_jobs in zip(sims, plan.device_jobs(jobs, route_rejected_to=sink)):
             sim.start(dev_jobs, done=resume_done)
         applied: List[Migration] = []
-        if self.rebalance_interval is None:
+        if self.rebalance_schedule is None:
             for sim in sims:
                 sim.advance(until)
         else:
@@ -364,7 +377,11 @@ class Cluster(_RebalanceMixin):
             jobs_by_id = {j.job_id: j for j in jobs}
             self._rec_mark = [0] * len(sims)
             self._monitors = [StragglerMonitor() for _ in sims]
-            t = self.rebalance_interval
+            # the event-core owns the epoch cadence: boundaries come from
+            # the shared schedule (repeated addition, the same arithmetic
+            # the concurrent fleet driver and the ctl daemon consume)
+            sched = self.rebalance_schedule
+            t = sched.next_boundary(0.0)
             while True:
                 before = sum(len(s._records) for s in sims)
                 horizon = t if until is None else min(t, until)
@@ -415,7 +432,7 @@ class Cluster(_RebalanceMixin):
                     and not any(s.pending_events for s in sims)
                 ):
                     break
-                t += self.rebalance_interval
+                t = sched.next_boundary(t)
         self._result = ClusterResult(
             [sim.result() for sim in sims],
             plan,
@@ -655,14 +672,23 @@ class ClusterExecutor(_RebalanceMixin):
     placement decisions the simulation cluster uses. Sessions are
     collected via :meth:`submit`; :meth:`run` places their JobSpecs with
     the shared :class:`Placer`, hands each session to its device's
-    executor, and drives the devices to completion (sequentially — one
-    host process time-multiplexes the fleet, which preserves each
-    device's decision sequence under nominal accounting). With
-    ``rebalance_interval`` set, devices run in lockstep ``run_epoch``
-    rounds and migrations really move session state across the host link
-    (``jax.device_get`` on the source, ``jax.device_put`` on the
-    destination — compose :func:`repro.dist.elastic.restore_on_mesh` via
-    ``SalusExecutor.migrate_in``'s ``put_fn`` for mesh-aware landings)."""
+    executor, and drives the devices with a thread-per-device
+    :class:`~repro.core.fleet.FleetDriver`: per-device workers execute
+    concurrently and synchronize at placement/rebalance epoch boundaries
+    (the epoch-barrier rule — see CONTRIBUTING). Between barriers a worker
+    touches only its own executor, so under nominal accounting each
+    device's decision sequence is bitwise-identical to the old sequential
+    device-at-a-time loop (``concurrency="sequential"`` keeps that loop;
+    the self-differential test asserts byte-identical logs). With
+    ``rebalance_interval`` set, migrations really move session state
+    across the host link at the barrier (``jax.device_get`` on the
+    source, ``jax.device_put`` on the destination — compose
+    :func:`repro.dist.elastic.restore_on_mesh` via
+    ``SalusExecutor.migrate_in``'s ``put_fn`` for mesh-aware landings).
+    ``bind_jax_devices=True`` pins executor *i*'s transfers to
+    ``jax.devices()[i % len]`` — with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the CI
+    recipe) each worker then really owns a distinct XLA device."""
 
     def __init__(
         self,
@@ -674,16 +700,33 @@ class ClusterExecutor(_RebalanceMixin):
         accounting: str = "wall",
         deficit_quantum: Optional[int] = None,
         rebalancer: Optional[Rebalancer] = None,
-        rebalance_interval: Optional[float] = None,
+        rebalance_interval: Union[float, EpochSchedule, None] = None,
         fault_injector: Optional[Any] = None,
+        concurrency: str = "threads",
+        bind_jax_devices: bool = False,
     ) -> None:
+        if concurrency not in ("threads", "sequential"):
+            raise ValueError(
+                f"concurrency must be threads|sequential, got {concurrency!r}"
+            )
+        self.concurrency = concurrency
         self.placer = Placer(
             n_devices, capacity, strategy, deficit_quantum=deficit_quantum
         )
         policy = get_policy(policy)
+        devices: List[Any] = [None] * n_devices
+        if bind_jax_devices:
+            import jax
+
+            avail = jax.devices()
+            devices = [avail[i % len(avail)] for i in range(n_devices)]
         self.executors = [
             SalusExecutor(
-                self.placer.capacities[i], policy, memory=memory, accounting=accounting
+                self.placer.capacities[i],
+                policy,
+                memory=memory,
+                accounting=accounting,
+                device=devices[i],
             )
             for i in range(n_devices)
         ]
@@ -713,8 +756,10 @@ class ClusterExecutor(_RebalanceMixin):
         return self._plan.decision_log() if self._plan is not None else []
 
     def run(self, max_wall: Optional[float] = None) -> ClusterReport:
-        """``max_wall`` is a *fleet-wide* budget: devices run sequentially
-        on one host, so each gets whatever remains of it."""
+        """``max_wall`` is a *fleet-wide* wall budget measured from run()
+        entry: under the default thread-per-device driver, devices run
+        concurrently and each worker checks the same fleet clock; under
+        ``concurrency="sequential"`` each device gets whatever remains."""
         plan = self.placer.place([s.job for s in self._sessions])
         self._plan = plan
         sink = max(
@@ -734,24 +779,59 @@ class ClusterExecutor(_RebalanceMixin):
             return max(0.0, max_wall - (time.perf_counter() - t0))
 
         applied: List[Migration] = []
-        if self.rebalance_interval is not None:
-            self._mig_seq = 0
-            t = self.rebalance_interval
-            while True:
-                progress = 0
-                for ex in self.executors:
-                    progress += ex.run_epoch(t, max_wall=remaining())
-                attempted = self._rebalance_executors(plan, t, applied)
-                if not attempted and (
-                    all(ex.done() for ex in self.executors) or progress == 0
-                ):
-                    # quiescent fleet: either finished, or stalled work the
-                    # final full drive below will surface (deadlock guard)
-                    break
-                if max_wall is not None and time.perf_counter() - t0 > max_wall:
-                    break
-                t += self.rebalance_interval
-        reports = [ex.run(max_wall=remaining()) for ex in self.executors]
+        driver: Optional[FleetDriver] = None
+        if self.concurrency == "threads":
+            driver = FleetDriver(self.n_devices)
+        try:
+            if self.rebalance_schedule is not None:
+                self._mig_seq = 0
+                sched = self.rebalance_schedule
+                t = sched.next_boundary(0.0)
+                while True:
+                    if driver is not None:
+                        # concurrent epoch: every worker drives its own
+                        # device to the shared horizon; the barrier inside
+                        # map_epoch IS the epoch boundary — only after it
+                        # may this (driver) thread touch the executors
+                        # (epoch-barrier rule, see fleet.py / CONTRIBUTING)
+                        counts = driver.map_epoch(
+                            [
+                                (
+                                    lambda ex=ex, horizon=t: ex.run_epoch(
+                                        horizon, max_wall=remaining()
+                                    )
+                                )
+                                for ex in self.executors
+                            ]
+                        )
+                        progress = sum(counts)
+                    else:
+                        progress = 0
+                        for ex in self.executors:
+                            progress += ex.run_epoch(t, max_wall=remaining())
+                    attempted = self._rebalance_executors(plan, t, applied)
+                    if not attempted and (
+                        all(ex.done() for ex in self.executors) or progress == 0
+                    ):
+                        # quiescent fleet: either finished, or stalled work
+                        # the final full drive below will surface (deadlock
+                        # guard)
+                        break
+                    if max_wall is not None and time.perf_counter() - t0 > max_wall:
+                        break
+                    t = sched.next_boundary(t)
+            if driver is not None:
+                reports = driver.map_epoch(
+                    [
+                        (lambda ex=ex: ex.run(max_wall=remaining()))
+                        for ex in self.executors
+                    ]
+                )
+            else:
+                reports = [ex.run(max_wall=remaining()) for ex in self.executors]
+        finally:
+            if driver is not None:
+                driver.close()
         self._report = ClusterReport(reports, plan, migrations=applied)
         return self._report
 

@@ -24,6 +24,14 @@ Two kinds of object cross this module:
 (``engine.decision_log()``). :class:`DecisionLog` — a list that is also
 callable, returning its own entries — bridges the two so neither caller
 breaks.
+
+Time itself is NOT part of this protocol: every engine delegates event
+ordering and epoch cadence to the shared event-core
+(:mod:`repro.core.events`). Fleet engines and the ctl daemon accept a
+``rebalance_interval`` as either a raw float or an
+:class:`~repro.core.events.EpochSchedule` (coerced via
+:func:`~repro.core.events.as_schedule`); decision-log parity across
+backends holds *because* one kernel owns ordinals and tie grouping.
 """
 from __future__ import annotations
 

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 
@@ -74,9 +74,16 @@ class SalusExecutor:
         policy: Policy,
         memory: Optional[MemoryConfig] = None,
         accounting: str = "wall",
+        device: Optional[Any] = None,
     ) -> None:
         if accounting not in ("wall", "nominal"):
             raise ValueError(f"accounting must be wall|nominal, got {accounting!r}")
+        # optional jax.Device this executor's transfers land on (None =
+        # backend default). The concurrent fleet driver binds executor i to
+        # jax.devices()[i % len] so, with
+        # XLA_FLAGS=--xla_force_host_platform_device_count=N, each worker
+        # thread really owns a distinct XLA device.
+        self.device = device
         self.registry = LaneRegistry(capacity)
         self.memory = MemoryManager(self.registry, memory, pager=self._do_transfer)
         self.memory.on_admit = self._on_admit
@@ -148,7 +155,7 @@ class SalusExecutor:
             if direction == "out":
                 sess.state = jax.device_get(sess.state)
             else:
-                sess.state = jax.device_put(sess.state)
+                sess.state = jax.device_put(sess.state, self.device)
                 jax.block_until_ready(sess.state)
         dt = time.perf_counter() - t0
         self.transfer_latencies.append(dt)
@@ -362,7 +369,7 @@ class SalusExecutor:
         cost = None
         if session.state is not None:
             t0 = time.perf_counter()
-            put = put_fn or jax.device_put
+            put = put_fn or (lambda tree: jax.device_put(tree, self.device))
             session.state = put(session.state)
             jax.block_until_ready(session.state)
             cost = time.perf_counter() - t0

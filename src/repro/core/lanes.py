@@ -50,6 +50,7 @@ class LaneRegistry:
     def __init__(self, capacity: int) -> None:
         self.capacity = int(capacity)
         self.lanes: Dict[int, Lane] = {}
+        self._lane_total = 0  # invariant: == sum(l.size for l in lanes)
         self.persistent_used = 0
         self.queue: List[JobSpec] = []  # Q, FIFO order
         self.assignment: Dict[int, Lane] = {}  # job_id -> lane
@@ -65,27 +66,43 @@ class LaneRegistry:
 
     @property
     def lane_total(self) -> int:
-        return sum(l.size for l in self.lanes.values())
+        # maintained incrementally (sum L_j is on the per-event hot path of
+        # a million-job sweep); check_invariants re-derives it from scratch
+        return self._lane_total
 
     def safety_ok(self, extra_p: int = 0, extra_lane: int = 0) -> bool:
         return (
-            self.persistent_used + extra_p + self.lane_total + extra_lane
+            self.persistent_used + extra_p + self._lane_total + extra_lane
             <= self.capacity
         )
 
     def check_invariants(self) -> None:
+        actual_total = sum(l.size for l in self.lanes.values())
+        if actual_total != self._lane_total:
+            raise SafetyViolation(
+                f"lane_total cache {self._lane_total} != actual {actual_total}"
+            )
         if not self.safety_ok():
             raise SafetyViolation(
                 f"P={self.persistent_used} + L={self.lane_total} > C={self.capacity}"
             )
-        # lanes must tile [top - sum(sizes), top) contiguously, no overlap
-        occupied = sorted(
-            ((l.base, l.base + l.size) for l in self.lanes.values()),
-        )
-        for (a0, a1), (b0, b1) in zip(occupied, occupied[1:]):
-            if a1 > b0:
-                raise SafetyViolation(f"lane overlap: {occupied}")
-        if occupied:
+        lanes = self.lanes
+        if len(lanes) == 1:
+            # fast path: one lane must sit anchored at the capacity top,
+            # above the persistent region — no sorting machinery needed
+            (lane,) = lanes.values()
+            if lane.base + lane.size != self.capacity:
+                raise SafetyViolation("lanes not anchored at capacity top")
+            if lane.base < self.persistent_used:
+                raise SafetyViolation("ephemeral region collided with persistent")
+        elif lanes:
+            # lanes must tile [top - sum(sizes), top) contiguously, no overlap
+            occupied = sorted(
+                ((l.base, l.base + l.size) for l in lanes.values()),
+            )
+            for (a0, a1), (b0, b1) in zip(occupied, occupied[1:]):
+                if a1 > b0:
+                    raise SafetyViolation(f"lane overlap: {occupied}")
             if occupied[0][0] < self.persistent_used:
                 raise SafetyViolation("ephemeral region collided with persistent")
             if occupied[-1][1] != self.capacity:
@@ -93,7 +110,7 @@ class LaneRegistry:
             for (a0, a1), (b0, b1) in zip(occupied, occupied[1:]):
                 if a1 != b0:
                     raise SafetyViolation("lanes not contiguous (defrag missed)")
-        for lane in self.lanes.values():
+        for lane in lanes.values():
             for job in lane.jobs:
                 if job.profile.ephemeral > lane.size:
                     raise SafetyViolation(
@@ -137,6 +154,7 @@ class LaneRegistry:
             freed = job.profile.persistent
         if lane.ref == 0:
             del self.lanes[lane.lane_id]
+            self._lane_total -= lane.size
             self._defragment()
         else:
             new_size = max(j.profile.ephemeral for j in lane.jobs)
@@ -153,6 +171,7 @@ class LaneRegistry:
         c = LaneRegistry(self.capacity)
         for lid, lane in self.lanes.items():
             c.lanes[lid] = Lane(lane.lane_id, lane.size, lane.base, list(lane.jobs))
+        c._lane_total = self._lane_total
         c.persistent_used = self.persistent_used
         c.queue = list(self.queue)
         c.assignment = {
@@ -165,6 +184,9 @@ class LaneRegistry:
 
     def process_requests(self) -> None:
         """PROCESSREQUESTS: admit queued jobs in FIFO order where possible."""
+        if not self.queue:
+            self.check_invariants()
+            return
         admitted = []
         for job in list(self.queue):
             lane = self._find_lane(job.profile)
@@ -243,14 +265,16 @@ class LaneRegistry:
     # ------------------------------------------------------------------
 
     def _new_lane(self, size: int) -> Lane:
-        base = self.capacity - self.lane_total - size
+        base = self.capacity - self._lane_total - size
         lane = Lane(next(self._ids), size, base)
         self.lanes[lane.lane_id] = lane
+        self._lane_total += size
         return lane
 
     def _resize_lane(self, lane: Lane, new_size: int) -> None:
         if any(j.profile.ephemeral > new_size for j in lane.jobs):
             raise SafetyViolation("shrinking lane below resident job's E")
+        self._lane_total += new_size - lane.size
         lane.size = new_size
         self._defragment()
 

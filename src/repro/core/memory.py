@@ -221,6 +221,8 @@ class MemoryManager:
         """
         self._now = now
         reg = self.registry
+        if not reg.queue and not reg.paged:
+            return []  # nobody denied service: the tick cannot move state
         mark = len(self.events)
         # 1. accrue deficit for every job currently denied service
         for j in reg.queue:

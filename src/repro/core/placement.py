@@ -211,6 +211,71 @@ class _DeviceModel:
         return bool(self.registry.assignment)
 
 
+class _LeastLoadedIndex:
+    """O(log n) candidate selection for ``LEAST_LOADED``, equivalent to
+    ``min(fits, key=(outstanding(now), device_id))`` over the admitting
+    devices — the property the differential suite pins.
+
+    Two lazy heaps partition the fleet. Every device has exactly one
+    *valid* entry: idle devices (``busy_until <= now``) live in an
+    id-ordered heap, busy ones in a ``(busy_until, device_id)`` heap.
+    ``busy_until`` only ever grows (``place`` is work-conserving), so a
+    popped busy entry is valid iff it still matches the device — stale
+    entries are dropped and the newer one remains behind them. Ordering
+    matches the scan's key exactly: idle devices all tie at outstanding
+    0 and fall back to device_id; for busy devices ``outstanding =
+    busy_until - now`` is strictly monotone in ``busy_until`` at a fixed
+    ``now``, so ``(busy_until, id)`` heap order *is* ``(outstanding,
+    id)`` order. Devices that fail ``admits`` are set aside and
+    re-pushed so they stay candidates for later jobs."""
+
+    def __init__(self, devices: List[_DeviceModel]) -> None:
+        self._devices = devices
+        self._idle: List[int] = list(range(len(devices)))  # already heap-ordered
+        self._busy: List[tuple] = []  # (busy_until, device_id), lazily stale
+
+    def choose(self, job: JobSpec, now: float) -> Optional[_DeviceModel]:
+        devices, idle, busy = self._devices, self._idle, self._busy
+        while busy and busy[0][0] <= now:
+            bu, d = heapq.heappop(busy)
+            if bu == devices[d].busy_until:
+                heapq.heappush(idle, d)
+        skipped_idle: List[int] = []
+        chosen: Optional[_DeviceModel] = None
+        while idle:
+            dev = devices[heapq.heappop(idle)]
+            if dev.busy_until > now:
+                continue  # stale: placed on since it went idle; tracked in busy
+            if dev.admits(job):
+                chosen = dev
+                break
+            skipped_idle.append(dev.device_id)
+        for d in skipped_idle:
+            heapq.heappush(idle, d)
+        if chosen is not None:
+            return chosen
+        skipped_busy: List[tuple] = []
+        while busy:
+            bu, d = heapq.heappop(busy)
+            dev = devices[d]
+            if bu != dev.busy_until:
+                continue  # stale
+            if dev.admits(job):
+                chosen = dev
+                break
+            skipped_busy.append((bu, d))
+        for entry in skipped_busy:
+            heapq.heappush(busy, entry)
+        return chosen
+
+    def placed(self, dev: _DeviceModel) -> None:
+        """Record a binding: the device's valid entry moves to the busy
+        heap (``place`` guarantees ``busy_until > now`` afterwards). Its
+        old entry — consumed by :meth:`choose` or left stale — is
+        dropped lazily."""
+        heapq.heappush(self._busy, (dev.busy_until, dev.device_id))
+
+
 class Placer:
     """Assign every job in a trace to a device (or reject it), honoring
     the per-device lane safety condition at every binding."""
@@ -266,16 +331,31 @@ class Placer:
         seq = itertools.count()
         retire_heap: List[tuple] = []  # (est_finish, seq, device_id, job)
         max_cap = max(self.capacities) if self.capacities else 0
+        # LEAST_LOADED dominates the diurnal-sweep profile: the linear
+        # admits() scan per binding is O(jobs x devices). The lazy-heap
+        # index gives the identical choice (see _LeastLoadedIndex) in
+        # O(log devices) amortized; the byte-keyed strategies keep the
+        # scan — their keys change on every retire, not just on place.
+        index = (
+            _LeastLoadedIndex(devices)
+            if self.strategy is PlacementStrategy.LEAST_LOADED
+            else None
+        )
 
         def quantum(job: JobSpec) -> int:
             q = self.deficit_quantum
             return q if q is not None else job.profile.total
 
         def bind(job: JobSpec, now: float, kind: PlacementEventKind) -> bool:
-            dev = self._choose(devices, job, now)
+            if index is not None:
+                dev = index.choose(job, now)
+            else:
+                dev = self._choose(devices, job, now)
             if dev is None:
                 return False
             est = dev.place(job, now)
+            if index is not None:
+                index.placed(dev)
             heapq.heappush(retire_heap, (est, next(seq), dev.device_id, job))
             plan.assignments[job.job_id] = dev.device_id
             plan.events.append(

@@ -52,6 +52,7 @@ import traceback
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 from repro.core.cluster import Cluster, ClusterResult, EpochControl, EpochSnapshot
+from repro.core.events import EpochSchedule
 from repro.core.memory import MemoryConfig
 from repro.core.placement import Rebalancer
 from repro.core.types import GB, JobSpec, JobState
@@ -221,7 +222,10 @@ class CtlDaemon:
                 paging=self.paging, page_bandwidth=self.page_bandwidth
             ),
             rebalancer=Rebalancer(mode=self.rebalance_mode),
-            rebalance_interval=self.epoch,
+            # the on_epoch commit cadence is an event-core EpochSchedule:
+            # the same kernel that orders the simulators' events produces
+            # the boundaries this daemon persists at
+            rebalance_interval=EpochSchedule(self.epoch),
             on_epoch=self._on_epoch,
         )
 

@@ -24,3 +24,20 @@ class Publisher:
             for item in self.queue:
                 self._conn.execute("INSERT INTO q VALUES (?)", (item,))
             self._conn.execute("COMMIT")
+
+
+class Fleet:
+    """The join happens while the condition is held: workers that need the
+    lock to observe the stop flag can never exit, so close() never returns."""
+
+    def __init__(self, workers):
+        self._cv = threading.Condition()
+        self._workers = workers
+        self._stop = False
+
+    def close(self):
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+            for th in self._workers:
+                th.join()

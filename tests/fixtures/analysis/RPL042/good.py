@@ -24,3 +24,22 @@ class Publisher:
             self.queue.clear()
         for item in batch:
             self._conn.execute("INSERT INTO q VALUES (?)", (item,))
+
+
+class Fleet:
+    """Workers are woken under the condition, joined after releasing it —
+    a join inside would deadlock against workers waiting on the lock."""
+
+    def __init__(self, workers):
+        self._cv = threading.Condition()
+        self._workers = workers
+        self._stop = False
+
+    def close(self):
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for th in self._workers:
+            th.join()
+        sep = ", "
+        return sep.join(w.name for w in self._workers)  # str.join: not blocking

@@ -143,7 +143,7 @@ def test_rpl041_flags_only_the_unguarded_minority():
 def test_rpl042_names_each_blocking_shape():
     report = _run(PAIRED["RPL042"][1])
     symbols = sorted(f.symbol for f in report.findings if f.rule == "RPL042")
-    assert symbols == ["sendall", "sqlite:BEGIN", "sqlite:COMMIT", "time.sleep"]
+    assert symbols == ["join", "sendall", "sqlite:BEGIN", "sqlite:COMMIT", "time.sleep"]
 
 
 def test_rpl005_taint_flows_through_helper():

@@ -1,0 +1,410 @@
+"""Event-core + fleet-driver suite (the PR 10 refactor contract).
+
+Three layers, mirroring the refactor:
+
+* :mod:`repro.core.events` — the shared kernel that owns time, ordinals,
+  and event order: ordinal-stable tie grouping, generation invalidation,
+  deferred bulk loads, and the repeated-addition epoch cadence.
+* :class:`repro.core.fleet.FleetDriver` — barrier semantics, worker-order
+  results, deterministic error propagation, the close-outside-lock join.
+* The fleet differential — an N-device ClusterExecutor whose workers run
+  *concurrently* must reproduce the Cluster simulator's placement log and
+  every device's decision log (nominal accounting), paging on and off;
+  and the thread-per-device driver must be byte-identical to the
+  sequential device-at-a-time loop it replaced (self-differential over
+  decision logs and every nominal per-job stat).
+
+Plus the placement fast path: the ``_LeastLoadedIndex`` heap must pick
+the same device as the linear scan it replaced, on every call, and the
+``diurnal_trace`` generator feeding bench_simloop must be deterministic.
+"""
+import dataclasses
+import threading
+import time
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    GB,
+    Cluster,
+    ClusterExecutor,
+    JobSpec,
+    MemoryConfig,
+    MemoryProfile,
+)
+from repro.core.events import EpochSchedule, EventQueue, as_schedule
+from repro.core.fleet import FleetDriver
+from repro.core.session import Session
+from repro.core.tracegen import diurnal_trace, generate_trace
+
+CAP = 16 * GB
+MEMCFG = dict(page_bandwidth=1e12)
+
+
+def _job(name="j", t=0.0):
+    return JobSpec(
+        name=name,
+        profile=MemoryProfile(GB, GB),
+        n_iters=1,
+        iter_time=0.01,
+        arrival_time=t,
+    )
+
+
+# ---------------------------------------------------------------------------
+# EventQueue
+# ---------------------------------------------------------------------------
+
+
+def test_pop_batch_groups_ulp_smeared_ties_in_push_order():
+    q = EventQueue()
+    a, b, c = _job("a"), _job("b"), _job("c")
+    # float error smeared three simultaneous events across ~an ulp, and
+    # they were pushed in an order that disagrees with timestamp order
+    q.push(1.0 + 2e-10, "iter_done", a)
+    q.push(1.0, "iter_done", b)
+    q.push(1.0 + 1e-10, "iter_done", c)
+    q.push(1.5, "arrival", _job("later"))
+    batch = q.pop_batch()
+    # one bucket, replayed in push order, clock at the head timestamp
+    assert [ev[3].name for ev in batch] == ["a", "b", "c"]
+    assert q.now == 1.0
+    assert q.peek_time() == 1.5
+
+
+def test_pop_batch_keeps_distinct_instants_apart():
+    q = EventQueue()
+    q.push(1.0, "x", _job("a"))
+    q.push(1.001, "x", _job("b"))  # a real ms-scale gap, never a tie
+    assert [ev[3].name for ev in q.pop_batch()] == ["a"]
+    assert [ev[3].name for ev in q.pop_batch()] == ["b"]
+
+
+def test_pop_batch_honors_until_and_clamp_advances_clock():
+    q = EventQueue()
+    q.push(5.0, "x", _job())
+    assert q.pop_batch(until=4.0) is None
+    assert q.now == 0.0  # the clock is left for clamp
+    q.clamp(4.0)
+    assert q.now == 4.0
+    assert q.pop_batch(until=5.0) is not None
+    assert q.now == 5.0
+    assert q.pop_batch() is None  # empty queue
+    q.clamp(3.0)
+    assert q.now == 5.0  # clamp never moves the clock backwards
+
+
+def test_generation_invalidation_marks_inflight_events_stale():
+    q = EventQueue()
+    a, b = _job("a"), _job("b")
+    q.push(1.0, "iter_done", a)
+    q.push(1.0, "iter_done", b)
+    q.invalidate(a.job_id)  # a migrated away; its queued event is dead
+    evs = {ev[3].name: ev for ev in q.pop_batch()}
+    assert q.is_stale(evs["a"]) and not q.is_stale(evs["b"])
+    # events pushed after the bump carry the new generation: not stale
+    q.push(2.0, "iter_done", a)
+    (ev,) = q.pop_batch()
+    assert not q.is_stale(ev)
+
+
+def test_defer_bulk_load_restores_heap_order_lazily():
+    q = EventQueue()
+    q.defer()
+    times = [7.0, 1.0, 4.0, 2.0, 9.0, 3.0]
+    for i, t in enumerate(times):
+        q.push(t, "arrival", _job(f"j{i}", t))
+    assert len(q) == len(times)
+    assert q.peek_time() == 1.0  # heapified on first peek
+    popped = []
+    while q:
+        popped.extend(ev[0] for ev in q.pop_batch())
+    assert popped == sorted(times)
+
+
+# ---------------------------------------------------------------------------
+# EpochSchedule
+# ---------------------------------------------------------------------------
+
+
+def test_epoch_boundaries_are_bitwise_repeated_addition():
+    sched = EpochSchedule(0.02)
+    # the contract: boundaries match the engines' historical `t += dt`
+    # accumulation bit for bit (NOT k*dt, which drifts by ulps)
+    t, expect = 0.0, []
+    for _ in range(1000):
+        t = t + 0.02
+        expect.append(t)
+    got = []
+    t = 0.0
+    for _ in range(1000):
+        t = sched.next_boundary(t)
+        got.append(t)
+    assert got == expect
+    from itertools import islice
+
+    assert list(islice(sched.boundaries(), 1000)) == expect
+
+
+def test_as_schedule_coercion():
+    assert as_schedule(None) is None
+    s = EpochSchedule(1.0)
+    assert as_schedule(s) is s
+    assert as_schedule(0.5).interval == 0.5
+    with pytest.raises(ValueError):
+        EpochSchedule(0.0)
+
+
+# ---------------------------------------------------------------------------
+# FleetDriver
+# ---------------------------------------------------------------------------
+
+
+def test_map_epoch_runs_workers_concurrently_and_orders_results():
+    n = 4
+    gate = threading.Barrier(n, timeout=10.0)
+
+    def body(i):
+        # every worker must be inside its epoch body at once to pass the
+        # barrier: proves real concurrency, not a disguised serial loop
+        gate.wait()
+        return i * 10
+
+    with FleetDriver(n) as driver:
+        assert driver.map_epoch([lambda i=i: body(i) for i in range(n)]) == [
+            0,
+            10,
+            20,
+            30,
+        ]
+        # the driver is reusable across epochs
+        assert driver.map_epoch([lambda i=i: body(i) for i in range(n)]) == [
+            0,
+            10,
+            20,
+            30,
+        ]
+
+
+def test_map_epoch_reraises_lowest_worker_error_deterministically():
+    def boom(i):
+        raise RuntimeError(f"dev{i}")
+
+    with FleetDriver(3) as driver:
+        with pytest.raises(RuntimeError, match="dev1"):
+            driver.map_epoch([lambda: 0, lambda: boom(1), lambda: boom(2)])
+        # all workers parked again: the next epoch still works
+        assert driver.map_epoch([lambda: 1, lambda: 2, lambda: 3]) == [1, 2, 3]
+
+
+def test_driver_close_is_idempotent_and_fails_further_epochs():
+    driver = FleetDriver(2)
+    driver.close()
+    driver.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        driver.map_epoch([lambda: 0, lambda: 1])
+
+
+def test_map_epoch_rejects_wrong_arity():
+    with FleetDriver(2) as driver:
+        with pytest.raises(ValueError):
+            driver.map_epoch([lambda: 0])
+
+
+# ---------------------------------------------------------------------------
+# Fleet differential: concurrent ClusterExecutor <-> simulated Cluster
+# ---------------------------------------------------------------------------
+
+
+def _specs(seed, n_jobs=8, max_iters=3):
+    out = []
+    for i, j in enumerate(generate_trace(n_jobs=n_jobs, seed=seed)):
+        out.append(
+            dict(
+                name=f"{i}:{j.name}",
+                profile=j.profile,
+                n_iters=max(2, min(j.n_iters, max_iters)),
+                iter_time=round(min(max(j.iter_time * 0.02, 0.002), 0.02), 6),
+            )
+        )
+    return out
+
+
+def _run_cluster(specs, paging, n_devices):
+    jobs = [
+        JobSpec(
+            name=s["name"], profile=s["profile"], n_iters=s["n_iters"],
+            iter_time=s["iter_time"], utilization=1.0, arrival_time=0.0,
+        )
+        for s in specs
+    ]
+    return Cluster(
+        n_devices, CAP, "fifo", strategy="least_loaded",
+        memory=MemoryConfig(paging=paging, **MEMCFG),
+    ).run(jobs)
+
+
+def _run_fleet(specs, paging, n_devices, concurrency="threads"):
+    cex = ClusterExecutor(
+        n_devices, CAP, "fifo", strategy="least_loaded",
+        memory=MemoryConfig(paging=paging, **MEMCFG),
+        accounting="nominal", concurrency=concurrency,
+    )
+    for s in specs:
+        it = s["iter_time"]
+
+        def step(state, batch, _t=it):
+            time.sleep(_t)  # stand-in for a real device iteration
+            return state
+
+        cex.submit(
+            Session(
+                s["name"], step, jnp.zeros((4,), jnp.float32), lambda i: None,
+                s["n_iters"], profile=s["profile"], iter_time=it,
+                utilization=1.0, arrival_time=0.0,
+            )
+        )
+    rep = cex.run()
+    names = {
+        jid: sess.name for ex in cex.executors for jid, sess in ex.sessions.items()
+    }
+    return cex, rep, names
+
+
+@pytest.mark.parametrize(
+    "seed,paging", [(1, False), (5, False), (9, False), (1, True), (5, True), (9, True)]
+)
+def test_concurrent_fleet_mirrors_cluster_simulator(seed, paging):
+    """Workers race in real time, yet under nominal accounting every
+    device's decision sequence must equal the simulator's — the
+    epoch-barrier rule is what makes this hold."""
+    n_devices = 3
+    specs = _specs(seed)
+    csim = _run_cluster(specs, paging, n_devices)
+    _, rep, names = _run_fleet(specs, paging, n_devices)
+    assert csim.placement_log() == rep.placement_log()
+    for dev in range(n_devices):
+        assert (
+            csim.device_results[dev].decision_log
+            == rep.device_reports[dev].decision_log
+        ), f"device {dev} decision logs diverged"
+    sim_done = {
+        csim.jobs[j].name
+        for j, st in csim.stats.items()
+        if st.finish_time is not None
+    }
+    exec_done = {
+        names[j] for j, st in rep.stats.items() if st.finish_time is not None
+    }
+    assert sim_done == exec_done
+
+
+# the four wall-anchored stamps: absolute perf_counter readings that no two
+# runs (even two sequential ones) share; every other field is nominal
+# accounting and must match bit for bit
+_WALL_STAMPS = {"arrival_time", "admit_time", "first_run_time", "finish_time"}
+
+
+@pytest.mark.parametrize("seed,paging", [(1, False), (5, True), (9, True)])
+def test_threaded_fleet_matches_sequential_loop_byte_for_byte(seed, paging):
+    """The self-differential the refactor is contractually bound to:
+    thread-per-device execution must leave no trace in the decision data —
+    identical placement log, per-device decision logs, iteration records,
+    and every nominal per-job stat."""
+    n_devices = 3
+    specs = _specs(seed)
+    cth, rth, nth = _run_fleet(specs, paging, n_devices, concurrency="threads")
+    cse, rse, nse = _run_fleet(specs, paging, n_devices, concurrency="sequential")
+    assert cth.decision_log() == cse.decision_log()
+    for dev in range(n_devices):
+        assert (
+            rth.device_reports[dev].decision_log
+            == rse.device_reports[dev].decision_log
+        ), f"device {dev} decision logs diverged"
+        assert [
+            (nth[r.job_id], r.index, r.lane_id)
+            for r in rth.device_reports[dev].records
+        ] == [
+            (nse[r.job_id], r.index, r.lane_id)
+            for r in rse.device_reports[dev].records
+        ]
+    sth = {nth[j]: st for j, st in rth.stats.items()}
+    sse = {nse[j]: st for j, st in rse.stats.items()}
+    assert set(sth) == set(sse)
+    for name in sth:
+        for f in dataclasses.fields(sth[name]):
+            if f.name in _WALL_STAMPS:
+                continue
+            assert getattr(sth[name], f.name) == getattr(sse[name], f.name), (
+                f"{name}.{f.name}: {getattr(sth[name], f.name)!r} != "
+                f"{getattr(sse[name], f.name)!r}"
+            )
+
+
+def test_fleet_rejects_unknown_concurrency():
+    with pytest.raises(ValueError):
+        ClusterExecutor(2, CAP, "fifo", concurrency="processes")
+
+
+# ---------------------------------------------------------------------------
+# Placement fast path: heap index == linear scan
+# ---------------------------------------------------------------------------
+
+
+class _ScanIndex:
+    """The documented reference: min over admitting devices keyed on
+    (outstanding seconds, device_id) — the O(n) scan the heap replaced."""
+
+    def __init__(self, devices):
+        self._devices = devices
+
+    def choose(self, job, now):
+        fits = [d for d in self._devices if d.admits(job)]
+        if not fits:
+            return None
+        return min(fits, key=lambda d: (d.outstanding(now), d.device_id))
+
+    def placed(self, dev):
+        pass
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_least_loaded_index_equals_linear_scan(seed, monkeypatch):
+    import repro.core.placement as placement
+
+    jobs = generate_trace(n_jobs=200, seed=seed, mean_interarrival=3.0)
+    fast = placement.Placer(8, CAP, "least_loaded").place(jobs)
+    monkeypatch.setattr(placement, "_LeastLoadedIndex", _ScanIndex)
+    slow = placement.Placer(8, CAP, "least_loaded").place(jobs)
+    assert fast.decision_log() == slow.decision_log()
+    assert fast.assignments == slow.assignments
+    assert fast.rejected == slow.rejected
+
+
+# ---------------------------------------------------------------------------
+# diurnal_trace: the bench_simloop generator
+# ---------------------------------------------------------------------------
+
+
+def test_diurnal_trace_is_deterministic_and_well_formed():
+    a = diurnal_trace(n_jobs=2000, seed=7)
+    b = diurnal_trace(n_jobs=2000, seed=7)
+    assert len(a) == 2000
+    assert [(j.name, j.arrival_time, j.n_iters) for j in a] == [
+        (j.name, j.arrival_time, j.n_iters) for j in b
+    ]
+    assert a != diurnal_trace(n_jobs=2000, seed=8)
+    times = [j.arrival_time for j in a]
+    assert times == sorted(times) and times[0] >= 0.0
+    assert all(j.n_iters >= 1 and j.iter_time > 0 for j in a)
+
+
+def test_diurnal_trace_concentrates_arrivals_at_the_peak():
+    jobs = diurnal_trace(n_jobs=20000, seed=3, days=1.0, amplitude=0.8)
+    day = 86400.0
+    peak = sum(1 for j in jobs if 12 * 3600 <= j.arrival_time < 16 * 3600)
+    trough = sum(1 for j in jobs if 0 <= j.arrival_time < 4 * 3600)
+    # intensity 1+0.8cos peaks at 14:00 vs the ~02:00 trough: the 4-hour
+    # windows differ by several x; 2x is a loose, seed-robust bound
+    assert peak > 2 * trough
